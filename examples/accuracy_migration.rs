@@ -1,0 +1,68 @@
+//! Accuracy under frequent migration (paper Fig 4, scaled): the mobile
+//! device ping-pongs between the two edge servers every few rounds while
+//! training really runs through the AOT artifacts; FedFly and the
+//! SplitFed-restart baseline must reach the same accuracy.
+//!
+//! Also demonstrates the *lossless-migration* invariant: a FedFly run
+//! with moves produces bit-identical global parameters to a run with no
+//! moves at all.
+//!
+//! Run with: `cargo run --release --example accuracy_migration`
+
+use fedfly::config::{ExecMode, RunConfig};
+use fedfly::coordinator::Runner;
+use fedfly::data::imbalanced_fractions;
+use fedfly::experiments::{load_meta, render_fig4, fig4, Fig4Scale};
+use fedfly::mobility::Schedule;
+use fedfly::runtime::Engine;
+
+fn main() -> fedfly::Result<()> {
+    let meta = load_meta()?;
+    let engine = Engine::new(meta.manifest.clone())?;
+
+    // --- Fig 4 (scaled): 20% of data on the mobile device ---------------
+    let scale = Fig4Scale {
+        rounds: 12,
+        train_samples: 640,
+        test_samples: 160,
+        batch: 16,
+        move_period: 2,
+        eval_every: 2,
+    };
+    let res = fig4(&engine, &meta, 0.2, scale)?;
+    print!("{}", render_fig4(&res));
+
+    let fa = res.fedfly.final_accuracy().unwrap();
+    let sa = res.splitfed.final_accuracy().unwrap();
+    println!("\nfinal accuracy: fedfly {fa:.4} vs splitfed {sa:.4} (gap {:.4})", (fa - sa).abs());
+    assert!((fa - sa).abs() < 0.15, "strategies should reach similar accuracy");
+
+    // --- lossless-migration invariant -----------------------------------
+    let mut base = RunConfig::paper_testbed();
+    base.rounds = 6;
+    base.batch = 16;
+    base.train_samples = 320;
+    base.test_samples = 160;
+    base.exec = ExecMode::Real;
+    base.eval_every = None;
+    base.fractions = imbalanced_fractions(4, 0, 0.2);
+
+    let mut moving = base.clone();
+    moving.schedule = Schedule::periodic(0, 2, moving.rounds, (0, 1));
+    let with_moves = Runner::new(moving, meta.clone())?.run(Some(&engine))?;
+
+    let without_moves = Runner::new(base, meta.clone())?.run(Some(&engine))?;
+
+    let max_diff = with_moves
+        .final_params
+        .iter()
+        .zip(&without_moves.final_params)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "lossless-migration check: max |param diff| with vs without moves = {max_diff:e}"
+    );
+    assert_eq!(max_diff, 0.0, "FedFly migration must be bit-exact");
+    println!("accuracy_migration OK");
+    Ok(())
+}

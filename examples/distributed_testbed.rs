@@ -1,0 +1,58 @@
+//! Distributed testbed — the paper's deployment shape over real TCP
+//! sockets on localhost: 1 central server, 2 edge servers, 4 devices,
+//! each compute actor with its own PJRT engine, and a live FedFly
+//! checkpoint migration (MoveNotice -> CheckpointTransfer -> Resume,
+//! paper Fig 2) while training runs.
+//!
+//! Run with: `cargo run --release --example distributed_testbed`
+
+use fedfly::config::RunConfig;
+use fedfly::coordinator::distributed::run_in_threads;
+use fedfly::experiments::load_meta;
+use fedfly::mobility::Schedule;
+
+fn main() -> fedfly::Result<()> {
+    let meta = load_meta()?;
+
+    let mut cfg = RunConfig::small_real();
+    cfg.rounds = 4;
+    cfg.train_samples = 256;
+    cfg.test_samples = 64;
+    // Two devices migrate: device 0 at round 2 (edge 0 -> 1) and device 3
+    // at round 3 (edge 1 -> 0).
+    cfg.schedule = Schedule::new(vec![
+        fedfly::mobility::MoveEvent { round: 2, device: 0, to_edge: 1 },
+        fedfly::mobility::MoveEvent { round: 3, device: 3, to_edge: 0 },
+    ]);
+
+    println!(
+        "spinning up central + {} edges + {} devices over TCP ({} rounds)...",
+        cfg.n_edges(),
+        cfg.n_devices(),
+        cfg.rounds
+    );
+    let t0 = std::time::Instant::now();
+    let run = run_in_threads(&cfg, meta.manifest.clone())?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\ndevice  batches  mean_loss  final_loss  migrations  migration_s");
+    for d in &run.devices {
+        println!(
+            "{:>6}  {:>7}  {:>9.4}  {:>10.4}  {:>10}  {:>10.3}",
+            d.id, d.batches, d.mean_loss, d.final_loss, d.migrations, d.migration_seconds
+        );
+    }
+    let l2 = run
+        .final_params
+        .iter()
+        .map(|&x| (x as f64) * (x as f64))
+        .sum::<f64>()
+        .sqrt();
+    println!("\nfinal global params L2 = {l2:.4}; wall time {wall:.1}s");
+
+    let migrations: usize = run.devices.iter().map(|d| d.migrations).sum();
+    assert_eq!(migrations, 2, "expected both scheduled migrations to happen");
+    assert!(run.devices.iter().all(|d| d.batches > 0));
+    println!("distributed_testbed OK");
+    Ok(())
+}

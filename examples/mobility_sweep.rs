@@ -1,0 +1,77 @@
+//! Mobility sweep — FedFly's savings as a function of *when* the device
+//! moves (generalizing paper Fig 3's two stages to a full curve) plus the
+//! migration-route ablation (edge-to-edge vs device-relayed, paper §IV
+//! last paragraph) and the move-frequency factor (paper §III).
+//!
+//! Uses the simulated-testbed clock at paper scale (50k CIFAR, batch 100,
+//! 100 rounds), so it runs in seconds.
+//!
+//! Run with: `cargo run --release --example mobility_sweep`
+
+use fedfly::config::{ExecMode, RunConfig};
+use fedfly::coordinator::Runner;
+use fedfly::experiments::{analytic_savings, load_meta};
+use fedfly::migration::{MigrationRoute, Strategy};
+use fedfly::mobility::Schedule;
+
+fn main() -> fedfly::Result<()> {
+    let meta = load_meta()?;
+
+    println!("FedFly vs SplitFed: device training time per round vs move stage");
+    println!("(device Pi3_1, 25% of data, SP2, simulated paper-scale testbed)\n");
+    println!("stage  splitfed(s)  fedfly(s)  savings  analytic f/(1+f)");
+
+    for stage in [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9] {
+        let mut time = [0.0f64; 2];
+        for (i, strat) in [Strategy::Restart, Strategy::FedFly].iter().enumerate() {
+            let mut cfg = RunConfig::paper_testbed();
+            cfg.exec = ExecMode::SimOnly;
+            cfg.strategy = *strat;
+            cfg.schedule = Schedule::at_fraction(0, stage, cfg.rounds, 1);
+            let report = Runner::new(cfg, meta.clone())?.run(None)?;
+            time[i] = report.device_summary(0).effective_time_per_round;
+        }
+        println!(
+            "{:>4.0}%  {:>11.1}  {:>9.1}  {:>6.1}%  {:>15.1}%",
+            stage * 100.0,
+            time[0],
+            time[1],
+            (1.0 - time[1] / time[0]) * 100.0,
+            analytic_savings(stage) * 100.0
+        );
+    }
+
+    println!("\nmigration route ablation (move at 90%):");
+    println!("route         overhead(s)  fedfly(s/rnd)");
+    for (name, route) in [
+        ("edge-to-edge", MigrationRoute::EdgeToEdge),
+        ("via-device", MigrationRoute::ViaDevice),
+    ] {
+        let mut cfg = RunConfig::paper_testbed();
+        cfg.exec = ExecMode::SimOnly;
+        cfg.route = route;
+        cfg.schedule = Schedule::at_fraction(0, 0.9, cfg.rounds, 1);
+        let report = Runner::new(cfg, meta.clone())?.run(None)?;
+        let s = report.device_summary(0);
+        println!(
+            "{:<13} {:>10.3}  {:>13.1}",
+            name, s.total_migration_sim, s.effective_time_per_round
+        );
+    }
+
+    println!("\nmove-frequency sweep (paper §III factor 3; random trace, FedFly):");
+    println!("p(move)/round  moves(dev0)  overhead_total(s)  time/round(s)");
+    for p in [0.0, 0.05, 0.1, 0.2, 0.4] {
+        let mut cfg = RunConfig::paper_testbed();
+        cfg.exec = ExecMode::SimOnly;
+        cfg.schedule =
+            Schedule::random_trace(cfg.n_devices(), cfg.n_edges(), cfg.rounds, p, 13);
+        let report = Runner::new(cfg, meta.clone())?.run(None)?;
+        let s = report.device_summary(0);
+        println!(
+            "{:>13.2}  {:>11}  {:>17.2}  {:>12.1}",
+            p, s.moves, s.total_migration_sim, s.effective_time_per_round
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,186 @@
+"""AOT compiler: lower every training/eval phase to HLO text + manifest.
+
+Run once by ``make artifacts``; Python never appears on the Rust request
+path.  The interchange format is HLO *text* — the image's xla_extension
+0.5.1 rejects jax>=0.5 serialized HloModuleProto (64-bit instruction ids),
+while the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Artifacts (per split point k in {1,2,3} and batch variant b in {100,16}):
+
+  device_fwd_sp{k}_b{b}   (dev_params, x)                       -> (smashed,)
+  server_step_sp{k}_b{b}  (srv_params, srv_mom, smashed, labels)
+                          -> (new_params, new_mom, grad_smashed, loss)
+  device_bwd_sp{k}_b{b}   (dev_params, dev_mom, x, grad_smashed)
+                          -> (new_params, new_mom)
+  full_eval_b{b}          (params, x)                           -> (logits,)
+  full_step_b{b}          (params, mom, x, labels)              -> (params', mom', loss)
+
+plus ``manifest.json`` describing the flat parameter layout, split offsets,
+per-block FLOPs (for the Rust testbed time model), hyperparameters, and the
+I/O shapes of every artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+BATCH_VARIANTS = (100, 16)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side unwraps a single tuple output)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def build_artifact_specs():
+    """(name, fn, example_args, metadata) for every artifact."""
+    specs = []
+    n_total = M.TOTAL_PARAMS
+    for b in BATCH_VARIANTS:
+        x = f32(b, *M.IMAGE_SHAPE)
+        labels = i32(b)
+        for sp in M.SPLIT_POINTS:
+            nd = M.device_param_count(sp)
+            ns = n_total - nd
+            sm = f32(b, *M.SMASHED_SHAPES[sp])
+
+            specs.append(
+                (
+                    f"device_fwd_sp{sp}_b{b}",
+                    lambda dev, xx, sp=sp: (M.device_forward(sp, dev, xx),),
+                    (f32(nd), x),
+                    {"sp": sp, "batch": b, "phase": "device_fwd"},
+                )
+            )
+            specs.append(
+                (
+                    f"server_step_sp{sp}_b{b}",
+                    lambda srv, mom, smm, lab, sp=sp: M.server_step(sp, srv, mom, smm, lab),
+                    (f32(ns), f32(ns), sm, labels),
+                    {"sp": sp, "batch": b, "phase": "server_step"},
+                )
+            )
+            specs.append(
+                (
+                    f"device_bwd_sp{sp}_b{b}",
+                    lambda dev, mom, xx, gsm, sp=sp: M.device_backward(sp, dev, mom, xx, gsm),
+                    (f32(nd), f32(nd), x, sm),
+                    {"sp": sp, "batch": b, "phase": "device_bwd"},
+                )
+            )
+        specs.append(
+            (
+                f"full_eval_b{b}",
+                lambda p, xx: (M.full_eval(p, xx),),
+                (f32(n_total), x),
+                {"sp": 0, "batch": b, "phase": "full_eval"},
+            )
+        )
+        specs.append(
+            (
+                f"full_step_b{b}",
+                lambda p, mom, xx, lab: M.full_step(p, mom, xx, lab),
+                (f32(n_total), f32(n_total), x, labels),
+                {"sp": 0, "batch": b, "phase": "full_step"},
+            )
+        )
+    return specs
+
+
+def shape_list(avals):
+    return [list(a.shape) for a in avals]
+
+
+def lower_all(out_dir: str, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "model": "vgg5",
+        "lr": M.LR,
+        "momentum": M.MOMENTUM,
+        "num_classes": M.NUM_CLASSES,
+        "image_shape": list(M.IMAGE_SHAPE),
+        "total_params": M.TOTAL_PARAMS,
+        "batch_variants": list(BATCH_VARIANTS),
+        "params": [
+            {"name": n, "shape": list(s), "offset": o, "len": l}
+            for n, s, o, l in M.PARAM_LAYOUT
+        ],
+        "blocks": [
+            {
+                "name": f"block{i}",
+                "fwd_flops_per_image": M.BLOCK_FWD_FLOPS[i],
+                "params": M.BLOCK_PARAMS[i],
+            }
+            for i in range(5)
+        ],
+        "splits": {
+            str(sp): {
+                "device_params": M.device_param_count(sp),
+                "server_params": M.TOTAL_PARAMS - M.device_param_count(sp),
+                "smashed_shape": list(M.SMASHED_SHAPES[sp]),
+                "device_fwd_flops_per_image": sum(M.BLOCK_FWD_FLOPS[:sp]),
+                "server_fwd_flops_per_image": sum(M.BLOCK_FWD_FLOPS[sp:]),
+            }
+            for sp in M.SPLIT_POINTS
+        },
+        "artifacts": {},
+    }
+
+    for name, fn, args, meta in build_artifact_specs():
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *args)
+        manifest["artifacts"][name] = {
+            **meta,
+            "file": f"{name}.hlo.txt",
+            "inputs": shape_list(args),
+            "outputs": shape_list(out_avals),
+            "hlo_bytes": len(text),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        }
+        if verbose:
+            print(f"  {name}: {len(text)//1024} KiB")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    args = ap.parse_args()
+    man = lower_all(os.path.abspath(args.out_dir))
+    print(f"wrote {len(man['artifacts'])} artifacts + manifest.json to {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

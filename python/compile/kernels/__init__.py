@@ -1,0 +1,27 @@
+"""Layer-1 Pallas kernels for the FedFly VGG-5 compute path.
+
+Public surface used by the Layer-2 model:
+
+  conv3x3_relu(x, w, b)        — 3x3 SAME conv + ReLU (shift-and-matmul)
+  maxpool2(x)                  — 2x2/2 max pool
+  dense_relu / dense_linear    — FC layers
+  matmul(a, b)                 — generic blocked matmul
+  sgd_update(p, v, g, lr=, momentum=) — fused optimizer step
+
+All ops carry custom VJPs whose backward passes are Pallas kernels as well,
+so ``jax.grad`` over the model touches only kernel code plus cheap glue.
+"""
+
+from .conv2d import conv3x3_relu
+from .matmul import dense_linear, dense_relu, matmul
+from .pool import maxpool2
+from .sgd import sgd_update
+
+__all__ = [
+    "conv3x3_relu",
+    "dense_linear",
+    "dense_relu",
+    "matmul",
+    "maxpool2",
+    "sgd_update",
+]

@@ -1,0 +1,51 @@
+"""Shared helpers for the Pallas kernels.
+
+All kernels in this package are lowered with ``interpret=True`` — the only
+mode the CPU PJRT plugin can execute (real-TPU lowering emits a Mosaic
+custom-call).  The kernels are still *shaped* for TPU: matmul-dominated
+inner loops sized for the MXU, batch-tiled BlockSpecs sized for VMEM.
+DESIGN.md §Hardware-Adaptation records the mapping.
+"""
+
+from __future__ import annotations
+
+INTERPRET = True  # flipped only on a real TPU toolchain
+
+#: Conv inner-loop strategy (perf pass, EXPERIMENTS.md §Perf L1):
+#:
+#: * ``False`` — nine shifted K=Cin matmuls accumulated in registers.
+#:   Fastest on the CPU-PJRT backend this image executes on (no patch
+#:   buffer materialization); K=32..64 underfills a real MXU's 128-lane
+#:   contraction dimension (~25-50% estimated utilization).
+#: * ``True``  — im2col: one (bt*H*W, 9*Cin) @ (9*Cin, Cout) matmul.
+#:   K=288..576 fills the MXU systolic array (~75-90% estimated
+#:   utilization) at the cost of a <=2.9 MB VMEM patch buffer; measured
+#:   3x SLOWER under interpret-on-CPU, so it is the real-TPU choice only.
+CONV_IM2COL = False
+
+#: Candidate batch-tile sizes, largest first.  Perf pass (EXPERIMENTS.md
+#: §Perf L1): tile 10 at batch 100 (resp. 8 at batch 16) keeps the widest
+#: conv block at 10x34x34x64 f32 ≈ 2.96 MB — inside the 4 MB VMEM budget
+#: with double-buffering headroom — while halving the grid-step count of
+#: the original tile-5 choice (less loop overhead in interpret mode, fewer
+#: DMA issues on a real TPU).
+_BATCH_TILES = (10, 8, 5, 4, 2, 1)
+
+#: Candidate row tiles for generic matmuls (weight-gradient shapes).
+_ROW_TILES = (128, 100, 64, 50, 32, 25, 20, 16, 10, 8, 5, 4, 2, 1)
+
+
+def pick_batch_tile(b: int) -> int:
+    """Largest candidate batch tile dividing ``b``."""
+    for t in _BATCH_TILES:
+        if b % t == 0:
+            return t
+    return 1
+
+
+def pick_row_tile(m: int) -> int:
+    """Largest candidate row tile dividing ``m`` (for (M,K)@(K,N) grids)."""
+    for t in _ROW_TILES:
+        if m % t == 0:
+            return t
+    return 1

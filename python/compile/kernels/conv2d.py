@@ -1,0 +1,156 @@
+"""3x3 SAME convolution as a Pallas shift-and-matmul kernel.
+
+The paper's VGG-5 hot-spot is its three 3x3 conv layers.  Instead of a
+direct stencil (GPU-shaped), the kernel expresses the conv as nine
+accumulated ``(bt*H*W, Cin) @ (Cin, Cout)`` matmuls — one per filter tap —
+so on a real TPU the inner loop feeds the MXU systolic array back-to-back.
+The grid tiles the batch; each grid step's working set (padded input tile,
+full 3x3 weight, output tile) stays within a small VMEM budget (see
+DESIGN.md §Hardware-Adaptation for the footprint table).
+
+Gradients are Pallas too:
+  * grad-input  = the same forward kernel run on the padded upstream
+    gradient with spatially flipped, channel-transposed weights
+    (the standard conv-transpose identity, derived in DESIGN.md);
+  * grad-weight = nine ``(Cin, bt*H*W) @ (bt*H*W, Cout)`` matmuls per batch
+    tile, accumulated across grid steps into the same output block.
+
+``conv3x3_relu`` wraps forward+backward in ``jax.custom_vjp`` so the L2
+model can be differentiated with plain ``jax.grad``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import CONV_IM2COL, INTERPRET, pick_batch_tile
+
+_PAD = ((0, 0), (1, 1), (1, 1), (0, 0))  # NHWC SAME padding for 3x3
+
+
+def _conv_kernel(xp_ref, w_ref, b_ref, o_ref, *, height, width, relu):
+    """One batch tile of y = relu(conv3x3(x) + b).
+
+    xp_ref: (bt, H+2, W+2, Cin) padded input tile
+    w_ref:  (3, 3, Cin, Cout)
+    b_ref:  (Cout,)
+    o_ref:  (bt, H, W, Cout)
+
+    Two inner-loop strategies, selected by ``common.CONV_IM2COL`` (see the
+    perf-pass discussion there and in EXPERIMENTS.md §Perf L1): the
+    CPU-fast nine-shifted-matmul accumulation, or the MXU-shaped im2col
+    single matmul with K = 9*Cin.
+    """
+    bt, _, _, cin = xp_ref.shape
+    cout = w_ref.shape[3]
+    taps = [
+        xp_ref[:, a : a + height, b : b + width, :].reshape(bt * height * width, cin)
+        for a in range(3)
+        for b in range(3)
+    ]
+    if CONV_IM2COL:
+        patches = jnp.concatenate(taps, axis=1)  # (bt*H*W, 9*Cin)
+        acc = patches @ w_ref[...].reshape(9 * cin, cout)
+    else:
+        acc = jnp.zeros((bt * height * width, cout), jnp.float32)
+        for k, tap in enumerate(taps):
+            acc += tap @ w_ref[k // 3, k % 3]
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.reshape(bt, height, width, cout)
+
+
+def _conv_call(xp, w, bias, *, relu):
+    """Pallas call over padded NHWC input ``xp`` (B, H+2, W+2, Cin)."""
+    batch, hp, wp, cin = xp.shape
+    height, width = hp - 2, wp - 2
+    cout = w.shape[3]
+    bt = pick_batch_tile(batch)
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, height=height, width=width, relu=relu),
+        grid=(batch // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, hp, wp, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((3, 3, cin, cout), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, height, width, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, height, width, cout), jnp.float32),
+        interpret=INTERPRET,
+    )(xp, w, bias)
+
+
+def _dw_kernel(xp_ref, g_ref, o_ref, *, height, width):
+    """Weight gradient for one batch tile, accumulated across the grid.
+
+    xp_ref: (bt, H+2, W+2, Cin); g_ref: (bt, H, W, Cout);
+    o_ref:  (3, 3, Cin, Cout) — same block for every grid step.
+    """
+    bt, _, _, cin = xp_ref.shape
+    cout = g_ref.shape[3]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[...].reshape(bt * height * width, cout)
+    # Same strategy split as the forward kernel (common.CONV_IM2COL).
+    taps = [
+        xp_ref[:, a : a + height, b : b + width, :].reshape(bt * height * width, cin)
+        for a in range(3)
+        for b in range(3)
+    ]
+    if CONV_IM2COL:
+        patches = jnp.concatenate(taps, axis=1)  # (bt*H*W, 9*Cin)
+        o_ref[...] += (patches.T @ g).reshape(3, 3, cin, cout)
+    else:
+        o_ref[...] += jnp.stack([tap.T @ g for tap in taps]).reshape(3, 3, cin, cout)
+
+
+def _dw_call(xp, g):
+    batch, hp, wp, cin = xp.shape
+    height, width = hp - 2, wp - 2
+    cout = g.shape[3]
+    bt = pick_batch_tile(batch)
+    return pl.pallas_call(
+        functools.partial(_dw_kernel, height=height, width=width),
+        grid=(batch // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, hp, wp, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((bt, height, width, cout), lambda i: (i, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((3, 3, cin, cout), lambda i: (0, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((3, 3, cin, cout), jnp.float32),
+        interpret=INTERPRET,
+    )(xp, g)
+
+
+@jax.custom_vjp
+def conv3x3_relu(x, w, bias):
+    """y = relu(conv3x3_same(x, w) + bias); NHWC, differentiable."""
+    return _conv_call(jnp.pad(x, _PAD), w, bias, relu=True)
+
+
+def _conv3x3_relu_fwd(x, w, bias):
+    y = _conv_call(jnp.pad(x, _PAD), w, bias, relu=True)
+    return y, (x, w, y)
+
+
+def _conv3x3_relu_bwd(res, g):
+    x, w, y = res
+    gm = g * (y > 0.0)  # relu mask
+    # grad-input: conv of padded gm with flipped, channel-transposed weights.
+    wflip = w[::-1, ::-1].transpose(0, 1, 3, 2)
+    cin = x.shape[3]
+    dx = _conv_call(jnp.pad(gm, _PAD), wflip, jnp.zeros((cin,), jnp.float32), relu=False)
+    dw = _dw_call(jnp.pad(x, _PAD), gm)
+    db = gm.sum(axis=(0, 1, 2))
+    return dx, dw, db
+
+
+conv3x3_relu.defvjp(_conv3x3_relu_fwd, _conv3x3_relu_bwd)

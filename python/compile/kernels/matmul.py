@@ -1,0 +1,94 @@
+"""Fully-connected layers as blocked Pallas matmuls.
+
+``dense_relu`` / ``dense_linear`` implement ``y = act(x @ w + b)`` for the
+VGG-5 classifier head; ``matmul`` is the generic (M,K)@(K,N) building block
+reused by both backward passes (grad-input ``g @ w.T`` and grad-weight
+``x.T @ g``).  Grids tile M (the batch for forward, the fan-in for
+grad-weight); K and N ride whole in VMEM — the largest block at VGG-5
+shapes is the 4096x128 fc1 weight, 2 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_batch_tile, pick_row_tile
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, relu):
+    y = x_ref[...] @ w_ref[...] + b_ref[...][None, :]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    o_ref[...] = y
+
+
+def _dense_call(x, w, bias, *, relu):
+    batch, fan_in = x.shape
+    fan_out = w.shape[1]
+    bt = pick_batch_tile(batch)
+    return pl.pallas_call(
+        functools.partial(_dense_kernel, relu=relu),
+        grid=(batch // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, fan_in), lambda i: (i, 0)),
+            pl.BlockSpec((fan_in, fan_out), lambda i: (0, 0)),
+            pl.BlockSpec((fan_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, fan_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, fan_out), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w, bias)
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] @ b_ref[...]
+
+
+def matmul(a, b):
+    """Generic (M,K)@(K,N) Pallas matmul, M-tiled."""
+    m, k = a.shape
+    n = b.shape[1]
+    mt = pick_row_tile(m)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(m // mt,),
+        in_specs=[
+            pl.BlockSpec((mt, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((mt, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+def _make_dense(relu):
+    @jax.custom_vjp
+    def op(x, w, bias):
+        return _dense_call(x, w, bias, relu=relu)
+
+    def fwd(x, w, bias):
+        y = _dense_call(x, w, bias, relu=relu)
+        return y, (x, w, y)
+
+    def bwd(res, g):
+        x, w, y = res
+        if relu:
+            g = g * (y > 0.0)
+        dx = matmul(g, w.T)
+        dw = matmul(x.T, g)
+        db = g.sum(axis=0)
+        return dx, dw, db
+
+    op.defvjp(fwd, bwd)
+    return op
+
+
+#: y = relu(x @ w + b) — fc1.
+dense_relu = _make_dense(True)
+#: y = x @ w + b — fc2 logits.
+dense_linear = _make_dense(False)

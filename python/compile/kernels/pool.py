@@ -1,0 +1,81 @@
+"""2x2/stride-2 max-pooling Pallas kernels.
+
+Backward distributes the upstream gradient *equally among tied maxima*,
+which is exactly ``jax.grad``'s semantics for a reshape+``jnp.max`` pool —
+so the pure-jnp oracle in ``ref.py`` and the kernel agree bit-for-bit on
+gradients even when ReLU floods a window with tied zeros.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_batch_tile
+
+
+def _pool_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    bt, height, width, ch = x.shape
+    o_ref[...] = x.reshape(bt, height // 2, 2, width // 2, 2, ch).max(axis=(2, 4))
+
+
+def _pool_call(x):
+    batch, height, width, ch = x.shape
+    bt = pick_batch_tile(batch)
+    return pl.pallas_call(
+        _pool_kernel,
+        grid=(batch // bt,),
+        in_specs=[pl.BlockSpec((bt, height, width, ch), lambda i: (i, 0, 0, 0))],
+        out_specs=pl.BlockSpec((bt, height // 2, width // 2, ch), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, height // 2, width // 2, ch), jnp.float32),
+        interpret=INTERPRET,
+    )(x)
+
+
+def _up2(a):
+    """Nearest-neighbour 2x upsample on the two spatial axes."""
+    return jnp.repeat(jnp.repeat(a, 2, axis=1), 2, axis=2)
+
+
+def _pool_bwd_kernel(x_ref, y_ref, g_ref, o_ref):
+    x = x_ref[...]
+    bt, height, width, ch = x.shape
+    mask = (x == _up2(y_ref[...])).astype(jnp.float32)
+    count = mask.reshape(bt, height // 2, 2, width // 2, 2, ch).sum(axis=(2, 4))
+    o_ref[...] = mask * _up2(g_ref[...]) / _up2(count)
+
+
+def _pool_bwd_call(x, y, g):
+    batch, height, width, ch = x.shape
+    bt = pick_batch_tile(batch)
+    half = pl.BlockSpec((bt, height // 2, width // 2, ch), lambda i: (i, 0, 0, 0))
+    full = pl.BlockSpec((bt, height, width, ch), lambda i: (i, 0, 0, 0))
+    return pl.pallas_call(
+        _pool_bwd_kernel,
+        grid=(batch // bt,),
+        in_specs=[full, half, half],
+        out_specs=full,
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(x, y, g)
+
+
+@jax.custom_vjp
+def maxpool2(x):
+    """2x2 stride-2 max pool over NHWC; differentiable."""
+    return _pool_call(x)
+
+
+def _maxpool2_fwd(x):
+    y = _pool_call(x)
+    return y, (x, y)
+
+
+def _maxpool2_bwd(res, g):
+    x, y = res
+    return (_pool_bwd_call(x, y, g),)
+
+
+maxpool2.defvjp(_maxpool2_fwd, _maxpool2_bwd)

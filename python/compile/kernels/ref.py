@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness contract: pytest (with hypothesis sweeps over
+shapes) asserts kernel == ref to float tolerance, and the full ref model's
+``jax.grad`` is compared against the kernel model's custom-VJP gradients.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv3x3_relu_ref(x, w, bias):
+    """relu(SAME 3x3 conv + bias); NHWC activations, HWIO weights."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jnp.maximum(y + bias[None, None, None, :], 0.0)
+
+
+def dense_relu_ref(x, w, bias):
+    return jnp.maximum(x @ w + bias[None, :], 0.0)
+
+
+def dense_linear_ref(x, w, bias):
+    return x @ w + bias[None, :]
+
+
+def maxpool2_ref(x):
+    """Reshape-based 2x2/2 max pool.  Its jax.grad splits gradient equally
+    among tied maxima — the semantics the Pallas backward kernel matches."""
+    b, h, w, c = x.shape
+    return x.reshape(b, h // 2, 2, w // 2, 2, c).max(axis=(2, 4))
+
+
+def sgd_update_ref(params, velocity, grads, *, lr, momentum):
+    v_new = momentum * velocity + grads
+    return params - lr * v_new, v_new
+
+
+def matmul_ref(a, b):
+    return a @ b

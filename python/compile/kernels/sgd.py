@@ -1,0 +1,53 @@
+"""Fused SGD-with-momentum update as a tiled elementwise Pallas kernel.
+
+The paper trains with SGD(lr=0.01, momentum=0.9).  The update runs over the
+*flat* parameter vector (the layout the Rust coordinator checkpoints and
+FedAvg-aggregates), padded to a tile multiple so the grid is uniform:
+
+    v' = mu * v + g
+    p' = p - lr * v'
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET
+
+# Perf pass (EXPERIMENTS.md §Perf L1): 64k-element tiles cut the grid for
+# the 582k-param update from 72 steps to 9; 5 tiles x 256 KiB ≈ 1.3 MB of
+# VMEM per step.
+_TILE = 65536
+
+
+def _sgd_kernel(p_ref, v_ref, g_ref, po_ref, vo_ref, *, lr, mu):
+    v_new = mu * v_ref[...] + g_ref[...]
+    vo_ref[...] = v_new
+    po_ref[...] = p_ref[...] - lr * v_new
+
+
+def sgd_update(params, velocity, grads, *, lr, momentum):
+    """Flat-vector SGD momentum step: returns (new_params, new_velocity)."""
+    n = params.shape[0]
+    padded = (n + _TILE - 1) // _TILE * _TILE
+    pad = padded - n
+    p = jnp.pad(params, (0, pad))
+    v = jnp.pad(velocity, (0, pad))
+    g = jnp.pad(grads, (0, pad))
+    spec = pl.BlockSpec((_TILE,), lambda i: (i,))
+    p_new, v_new = pl.pallas_call(
+        functools.partial(_sgd_kernel, lr=lr, mu=momentum),
+        grid=(padded // _TILE,),
+        in_specs=[spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded,), jnp.float32),
+            jax.ShapeDtypeStruct((padded,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(p, v, g)
+    return p_new[:n], v_new[:n]

@@ -1,0 +1,260 @@
+"""Layer-2: the paper's VGG-5 split model in JAX.
+
+Architecture (paper §V-A: VGG-5 on CIFAR-10, batch 100, SGD lr=0.01
+momentum=0.9), NHWC activations:
+
+    block0  conv 3->32  3x3 SAME + ReLU + maxpool2      (32x32 -> 16x16)
+    block1  conv 32->64 3x3 SAME + ReLU + maxpool2      (16x16 ->  8x8)
+    block2  conv 64->64 3x3 SAME + ReLU                 ( 8x8  ->  8x8)
+    block3  flatten -> fc 4096->128 + ReLU
+    block4  fc 128->10 (logits)
+
+Split points (paper Fig 3c): SP_k puts blocks[0:k] on the device and the
+rest on the edge server; SP2 is the paper's default for Fig 3a/3b.
+
+Every function here exists in two implementations selected by ``impl``:
+``"pallas"`` routes through the Layer-1 kernels (the code that ships in the
+artifacts), ``"ref"`` through the pure-jnp oracles (the correctness
+yardstick for pytest).  Parameters travel as a single flat f32 vector in
+the layout given by ``PARAM_SPECS`` — the same layout the Rust coordinator
+checkpoints, migrates, and FedAvg-averages.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+from .kernels import ref as R
+
+# ---------------------------------------------------------------------------
+# Hyperparameters (paper §V-A).
+LR = 0.01
+MOMENTUM = 0.9
+NUM_CLASSES = 10
+IMAGE_SHAPE = (32, 32, 3)
+
+# ---------------------------------------------------------------------------
+# Parameter layout: (name, shape).  Conv weights are HWIO; fc weights (in, out).
+PARAM_SPECS = [
+    ("conv1_w", (3, 3, 3, 32)),
+    ("conv1_b", (32,)),
+    ("conv2_w", (3, 3, 32, 64)),
+    ("conv2_b", (64,)),
+    ("conv3_w", (3, 3, 64, 64)),
+    ("conv3_b", (64,)),
+    ("fc1_w", (4096, 128)),
+    ("fc1_b", (128,)),
+    ("fc2_w", (128, 10)),
+    ("fc2_b", (10,)),
+]
+
+
+def _size(shape):
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+#: (name, shape, offset, length) for every tensor in the flat vector.
+PARAM_LAYOUT = []
+_off = 0
+for _name, _shape in PARAM_SPECS:
+    PARAM_LAYOUT.append((_name, _shape, _off, _size(_shape)))
+    _off += _size(_shape)
+TOTAL_PARAMS = _off
+
+#: Parameter tensors owned by each block (for the split offsets).
+BLOCK_PARAMS = [
+    ["conv1_w", "conv1_b"],
+    ["conv2_w", "conv2_b"],
+    ["conv3_w", "conv3_b"],
+    ["fc1_w", "fc1_b"],
+    ["fc2_w", "fc2_b"],
+]
+
+#: Smashed-activation shape (H, W, C) after blocks[0:k], k = 1..3.
+SMASHED_SHAPES = {1: (16, 16, 32), 2: (8, 8, 64), 3: (8, 8, 64)}
+
+SPLIT_POINTS = (1, 2, 3)
+
+
+def device_param_count(sp: int) -> int:
+    """Flat length of the device-side half at split point ``sp``."""
+    names = [n for blk in BLOCK_PARAMS[:sp] for n in blk]
+    return sum(length for name, _, _, length in PARAM_LAYOUT if name in names)
+
+
+# ---------------------------------------------------------------------------
+# Per-image forward FLOPs per block (2 * MACs), for the L3 testbed time model.
+def _conv_flops(h, w, cin, cout):
+    return 2 * 9 * cin * cout * h * w
+
+
+BLOCK_FWD_FLOPS = [
+    _conv_flops(32, 32, 3, 32),
+    _conv_flops(16, 16, 32, 64),
+    _conv_flops(8, 8, 64, 64),
+    2 * 4096 * 128,
+    2 * 128 * 10,
+]
+
+
+# ---------------------------------------------------------------------------
+# Flat-vector (un)packing.
+def unflatten(flat, names=None):
+    """Slice a flat vector into the named tensors (all of them by default).
+
+    When ``names`` is given, ``flat`` must hold exactly those tensors,
+    contiguously, in PARAM_SPECS order (device / server halves).
+    """
+    layout = PARAM_LAYOUT if names is None else [
+        entry for entry in PARAM_LAYOUT if entry[0] in names
+    ]
+    out, off = {}, 0
+    for name, shape, _, length in layout:
+        out[name] = jax.lax.dynamic_slice(flat, (off,), (length,)).reshape(shape)
+        off += length
+    return out
+
+
+def flatten(tensors, names=None):
+    layout = PARAM_LAYOUT if names is None else [
+        entry for entry in PARAM_LAYOUT if entry[0] in names
+    ]
+    return jnp.concatenate([tensors[name].reshape(-1) for name, _, _, _ in layout])
+
+
+def _split_names(sp):
+    dev = [n for blk in BLOCK_PARAMS[:sp] for n in blk]
+    srv = [n for blk in BLOCK_PARAMS[sp:] for n in blk]
+    return dev, srv
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces.
+def _ops(impl):
+    if impl == "pallas":
+        return K.conv3x3_relu, K.maxpool2, K.dense_relu, K.dense_linear
+    if impl == "ref":
+        return (
+            R.conv3x3_relu_ref,
+            R.maxpool2_ref,
+            R.dense_relu_ref,
+            R.dense_linear_ref,
+        )
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def _forward_blocks(p, x, start, end, impl):
+    """Run blocks[start:end] on activation ``x`` with tensors ``p``."""
+    conv, pool, frelu, flin = _ops(impl)
+    h = x
+    for blk in range(start, end):
+        if blk == 0:
+            h = pool(conv(h, p["conv1_w"], p["conv1_b"]))
+        elif blk == 1:
+            h = pool(conv(h, p["conv2_w"], p["conv2_b"]))
+        elif blk == 2:
+            h = conv(h, p["conv3_w"], p["conv3_b"])
+        elif blk == 3:
+            h = frelu(h.reshape(h.shape[0], -1), p["fc1_w"], p["fc1_b"])
+        elif blk == 4:
+            h = flin(h, p["fc2_w"], p["fc2_b"])
+    return h
+
+
+def device_forward(sp, dev_flat, x, impl="pallas"):
+    """Device half: image batch -> smashed activation."""
+    dev_names, _ = _split_names(sp)
+    p = unflatten(dev_flat, dev_names)
+    return _forward_blocks(p, x, 0, sp, impl)
+
+
+def server_forward(sp, srv_flat, smashed, impl="pallas"):
+    """Server half: smashed activation -> logits."""
+    _, srv_names = _split_names(sp)
+    p = unflatten(srv_flat, srv_names)
+    return _forward_blocks(p, smashed, sp, 5, impl)
+
+
+def full_forward(flat, x, impl="pallas"):
+    return _forward_blocks(unflatten(flat), x, 0, 5, impl)
+
+
+def softmax_xent(logits, labels):
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logp = logits - jax.scipy.special.logsumexp(logits, axis=1, keepdims=True)
+    onehot = (labels[:, None] == jnp.arange(NUM_CLASSES)[None, :]).astype(jnp.float32)
+    return -(onehot * logp).sum() / logits.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# Training-phase functions — one HLO artifact each (see aot.py).
+def server_step(sp, srv_flat, srv_mom, smashed, labels, impl="pallas"):
+    """Edge-server training phase for one batch.
+
+    Computes the loss from the smashed activation, updates the server-side
+    parameters with fused SGD-momentum, and returns the gradient w.r.t. the
+    smashed activation for the device's backward pass.
+    """
+
+    def loss_fn(srv, sm):
+        return softmax_xent(server_forward(sp, srv, sm, impl), labels)
+
+    loss, (g_srv, g_sm) = jax.value_and_grad(loss_fn, argnums=(0, 1))(srv_flat, smashed)
+    if impl == "pallas":
+        new_srv, new_mom = K.sgd_update(srv_flat, srv_mom, g_srv, lr=LR, momentum=MOMENTUM)
+    else:
+        new_srv, new_mom = R.sgd_update_ref(srv_flat, srv_mom, g_srv, lr=LR, momentum=MOMENTUM)
+    return new_srv, new_mom, g_sm, loss
+
+
+def device_backward(sp, dev_flat, dev_mom, x, g_smashed, impl="pallas"):
+    """Device training phase: recompute the device forward (residuals never
+    cross the PJRT boundary), pull the smashed-gradient through it, and
+    apply fused SGD-momentum to the device-side parameters."""
+    _, vjp = jax.vjp(lambda p: device_forward(sp, p, x, impl), dev_flat)
+    (g_dev,) = vjp(g_smashed)
+    if impl == "pallas":
+        return K.sgd_update(dev_flat, dev_mom, g_dev, lr=LR, momentum=MOMENTUM)
+    return R.sgd_update_ref(dev_flat, dev_mom, g_dev, lr=LR, momentum=MOMENTUM)
+
+
+def full_step(flat, mom, x, labels, impl="pallas"):
+    """Monolithic (non-split) training step — classic-FL comparator and the
+    L2 fusion sanity check (full_step ≈ device_fwd + server_step + device_bwd)."""
+
+    def loss_fn(p):
+        return softmax_xent(full_forward(p, x, impl), labels)
+
+    loss, g = jax.value_and_grad(loss_fn)(flat)
+    if impl == "pallas":
+        new_p, new_m = K.sgd_update(flat, mom, g, lr=LR, momentum=MOMENTUM)
+    else:
+        new_p, new_m = R.sgd_update_ref(flat, mom, g, lr=LR, momentum=MOMENTUM)
+    return new_p, new_m, loss
+
+
+def full_eval(flat, x, impl="pallas"):
+    """Logits for test-set accuracy."""
+    return full_forward(flat, x, impl)
+
+
+# ---------------------------------------------------------------------------
+# Initialization (He-normal) — mirrored by the Rust coordinator, which owns
+# the canonical init; this one is for python-side tests.
+def init_params(seed=0):
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape, _, length in PARAM_LAYOUT:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            chunks.append(jnp.zeros((length,), jnp.float32))
+        else:
+            fan_in = _size(shape[:-1])
+            std = (2.0 / fan_in) ** 0.5
+            chunks.append(jax.random.normal(sub, (length,), jnp.float32) * std)
+    return jnp.concatenate(chunks)

@@ -1,0 +1,97 @@
+"""AOT pipeline: manifest consistency and HLO artifact sanity.
+
+These tests validate the build products the Rust coordinator consumes.
+They re-derive expectations from the model module rather than trusting the
+manifest writer.
+"""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot as A
+from compile import model as M
+
+ART = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+class TestManifest:
+    def test_hyperparams(self):
+        m = manifest()
+        assert m["lr"] == M.LR
+        assert m["momentum"] == M.MOMENTUM
+        assert m["total_params"] == M.TOTAL_PARAMS
+
+    def test_param_layout_matches_model(self):
+        m = manifest()
+        assert len(m["params"]) == len(M.PARAM_LAYOUT)
+        for entry, (name, shape, offset, length) in zip(m["params"], M.PARAM_LAYOUT):
+            assert entry["name"] == name
+            assert tuple(entry["shape"]) == tuple(shape)
+            assert entry["offset"] == offset
+            assert entry["len"] == length
+
+    def test_split_metadata(self):
+        m = manifest()
+        for sp in M.SPLIT_POINTS:
+            s = m["splits"][str(sp)]
+            assert s["device_params"] == M.device_param_count(sp)
+            assert s["device_params"] + s["server_params"] == M.TOTAL_PARAMS
+            assert tuple(s["smashed_shape"]) == M.SMASHED_SHAPES[sp]
+            assert s["device_fwd_flops_per_image"] == sum(M.BLOCK_FWD_FLOPS[:sp])
+
+    def test_every_artifact_file_exists(self):
+        m = manifest()
+        assert len(m["artifacts"]) == len(A.BATCH_VARIANTS) * (3 * len(M.SPLIT_POINTS) + 2)
+        for name, meta in m["artifacts"].items():
+            path = os.path.join(ART, meta["file"])
+            assert os.path.exists(path), name
+            assert os.path.getsize(path) == meta["hlo_bytes"]
+
+    def test_artifact_io_shapes_match_eval_shape(self):
+        m = manifest()
+        for name, fn, args, _ in A.build_artifact_specs():
+            meta = m["artifacts"][name]
+            assert meta["inputs"] == A.shape_list(args), name
+            assert meta["outputs"] == A.shape_list(jax.eval_shape(fn, *args)), name
+
+
+class TestHloText:
+    def test_artifacts_are_hlo_modules(self):
+        m = manifest()
+        for name, meta in m["artifacts"].items():
+            with open(os.path.join(ART, meta["file"])) as f:
+                head = f.read(4096)
+            assert "HloModule" in head, name
+            assert "ENTRY" in open(os.path.join(ART, meta["file"])).read(), name
+
+    def test_server_step_has_four_outputs(self):
+        m = manifest()
+        for sp in M.SPLIT_POINTS:
+            for b in A.BATCH_VARIANTS:
+                meta = m["artifacts"][f"server_step_sp{sp}_b{b}"]
+                assert len(meta["outputs"]) == 4
+                ns = M.TOTAL_PARAMS - M.device_param_count(sp)
+                assert meta["outputs"][0] == [ns]
+                assert meta["outputs"][1] == [ns]
+                assert meta["outputs"][2] == [b, *M.SMASHED_SHAPES[sp]]
+                assert meta["outputs"][3] == []
+
+    def test_lowering_is_reproducible(self):
+        """Same model -> same HLO text (id reassignment is deterministic)."""
+        name, fn, args, _ = A.build_artifact_specs()[0]
+        t1 = A.to_hlo_text(jax.jit(fn).lower(*args))
+        t2 = A.to_hlo_text(jax.jit(fn).lower(*args))
+        assert t1 == t2

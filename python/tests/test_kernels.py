@@ -1,0 +1,250 @@
+"""Layer-1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps the shape space (batch sizes, channel widths, spatial
+sizes, fan-in/out) so the BlockSpec tiling logic is exercised across
+non-trivial grids, not just the VGG-5 shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref as R
+from compile.kernels.common import pick_batch_tile, pick_row_tile
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+def randf(r, *shape, scale=1.0):
+    return jnp.asarray(r.normal(size=shape).astype(np.float32) * scale)
+
+
+def assert_close(a, b, atol=1e-4, rtol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=atol, rtol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# conv3x3_relu
+
+
+class TestConv:
+    def test_vgg_shapes_forward(self):
+        r = rng(0)
+        for b, h, cin, cout in [(16, 32, 3, 32), (16, 16, 32, 64), (16, 8, 64, 64)]:
+            x = randf(r, b, h, h, cin)
+            w = randf(r, 3, 3, cin, cout, scale=0.1)
+            bias = randf(r, cout, scale=0.1)
+            assert_close(K.conv3x3_relu(x, w, bias), R.conv3x3_relu_ref(x, w, bias))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2, 4, 5, 8, 10]),
+        h=st.sampled_from([4, 6, 8, 16]),
+        cin=st.sampled_from([1, 3, 8, 16]),
+        cout=st.sampled_from([4, 8, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_forward_sweep(self, b, h, cin, cout, seed):
+        r = rng(seed)
+        x = randf(r, b, h, h, cin)
+        w = randf(r, 3, 3, cin, cout, scale=0.2)
+        bias = randf(r, cout, scale=0.2)
+        assert_close(K.conv3x3_relu(x, w, bias), R.conv3x3_relu_ref(x, w, bias))
+
+    def test_gradients_match_ref_autodiff(self):
+        r = rng(7)
+        x = randf(r, 4, 8, 8, 8)
+        w = randf(r, 3, 3, 8, 16, scale=0.2)
+        bias = randf(r, 16, scale=0.2)
+
+        def loss_k(x, w, b):
+            return (K.conv3x3_relu(x, w, b) ** 2).sum()
+
+        def loss_r(x, w, b):
+            return (R.conv3x3_relu_ref(x, w, b) ** 2).sum()
+
+        gk = jax.grad(loss_k, argnums=(0, 1, 2))(x, w, bias)
+        gr = jax.grad(loss_r, argnums=(0, 1, 2))(x, w, bias)
+        for a, b_ in zip(gk, gr):
+            assert_close(a, b_, atol=5e-3, rtol=1e-3)
+
+    def test_relu_mask_zeroes_negative_gradient(self):
+        # With a large negative bias every output is clamped to zero, so the
+        # entire gradient must vanish.
+        r = rng(3)
+        x = randf(r, 2, 4, 4, 2)
+        w = randf(r, 3, 3, 2, 4, scale=0.1)
+        bias = jnp.full((4,), -1e3, jnp.float32)
+        g = jax.grad(lambda x: K.conv3x3_relu(x, w, bias).sum())(x)
+        assert float(jnp.abs(g).max()) == 0.0
+
+    def test_identity_kernel(self):
+        # A center-tap identity filter must reproduce relu(x).
+        b, h, c = 2, 6, 3
+        r = rng(11)
+        x = randf(r, b, h, h, c)
+        w = jnp.zeros((3, 3, c, c), jnp.float32).at[1, 1].set(jnp.eye(c))
+        bias = jnp.zeros((c,), jnp.float32)
+        assert_close(K.conv3x3_relu(x, w, bias), jnp.maximum(x, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# dense / matmul
+
+
+class TestDense:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2, 4, 5, 8, 16, 100]),
+        fin=st.sampled_from([8, 32, 128]),
+        fout=st.sampled_from([10, 16, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_forward_sweep(self, b, fin, fout, seed):
+        r = rng(seed)
+        x = randf(r, b, fin)
+        w = randf(r, fin, fout, scale=0.2)
+        bias = randf(r, fout, scale=0.2)
+        assert_close(K.dense_relu(x, w, bias), R.dense_relu_ref(x, w, bias))
+        assert_close(K.dense_linear(x, w, bias), R.dense_linear_ref(x, w, bias))
+
+    def test_vgg_fc_shapes(self):
+        r = rng(5)
+        x = randf(r, 100, 4096, scale=0.05)
+        w = randf(r, 4096, 128, scale=0.02)
+        bias = randf(r, 128, scale=0.1)
+        assert_close(K.dense_relu(x, w, bias), R.dense_relu_ref(x, w, bias), atol=5e-4)
+
+    def test_gradients(self):
+        r = rng(9)
+        x = randf(r, 8, 32)
+        w = randf(r, 32, 10, scale=0.3)
+        bias = randf(r, 10, scale=0.3)
+        gk = jax.grad(lambda x, w, b: (K.dense_relu(x, w, b) ** 2).sum(), (0, 1, 2))(x, w, bias)
+        gr = jax.grad(lambda x, w, b: (R.dense_relu_ref(x, w, b) ** 2).sum(), (0, 1, 2))(x, w, bias)
+        for a, b_ in zip(gk, gr):
+            assert_close(a, b_)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        m=st.sampled_from([1, 4, 10, 100, 128]),
+        k=st.sampled_from([3, 16, 64]),
+        n=st.sampled_from([2, 8, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matmul_sweep(self, m, k, n, seed):
+        r = rng(seed)
+        a = randf(r, m, k)
+        b = randf(r, k, n)
+        assert_close(K.matmul(a, b), R.matmul_ref(a, b))
+
+
+# ---------------------------------------------------------------------------
+# maxpool2
+
+
+class TestPool:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2, 4, 5, 8]),
+        h=st.sampled_from([2, 4, 8, 16, 32]),
+        c=st.sampled_from([1, 3, 16, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_forward_sweep(self, b, h, c, seed):
+        r = rng(seed)
+        x = randf(r, b, h, h, c)
+        assert_close(K.maxpool2(x), R.maxpool2_ref(x))
+
+    def test_gradient_matches_ref(self):
+        r = rng(2)
+        x = randf(r, 4, 8, 8, 4)
+        gk = jax.grad(lambda x: (K.maxpool2(x) ** 2).sum())(x)
+        gr = jax.grad(lambda x: (R.maxpool2_ref(x) ** 2).sum())(x)
+        assert_close(gk, gr)
+
+    def test_gradient_ties_split_equally(self):
+        # A window of identical values must split gradient 4 ways — the
+        # ReLU-floods-zeros case the VGG stack hits constantly.
+        x = jnp.zeros((1, 2, 2, 1), jnp.float32)
+        g = jax.grad(lambda x: K.maxpool2(x).sum())(x)
+        assert_close(g, jnp.full((1, 2, 2, 1), 0.25))
+        gr = jax.grad(lambda x: R.maxpool2_ref(x).sum())(x)
+        assert_close(g, gr)
+
+    def test_pool_is_max(self):
+        x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+        y = K.maxpool2(x)
+        assert_close(y.reshape(-1), jnp.array([5.0, 7.0, 13.0, 15.0]))
+
+
+# ---------------------------------------------------------------------------
+# sgd_update
+
+
+class TestSgd:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.sampled_from([1, 7, 100, 8192, 8193, 100001]),
+        lr=st.sampled_from([0.01, 0.1]),
+        mu=st.sampled_from([0.0, 0.9]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_update_sweep(self, n, lr, mu, seed):
+        r = rng(seed)
+        p = randf(r, n)
+        v = randf(r, n)
+        g = randf(r, n)
+        pk, vk = K.sgd_update(p, v, g, lr=lr, momentum=mu)
+        pr, vr = R.sgd_update_ref(p, v, g, lr=lr, momentum=mu)
+        assert_close(pk, pr)
+        assert_close(vk, vr)
+
+    def test_momentum_accumulates(self):
+        # Two steps with constant gradient: v2 = (1+mu)g, p2 = -lr*(2+mu)*g.
+        n, lr, mu = 64, 0.1, 0.9
+        g = jnp.ones((n,), jnp.float32)
+        p = jnp.zeros((n,), jnp.float32)
+        v = jnp.zeros((n,), jnp.float32)
+        p, v = K.sgd_update(p, v, g, lr=lr, momentum=mu)
+        p, v = K.sgd_update(p, v, g, lr=lr, momentum=mu)
+        assert_close(v, jnp.full((n,), 1.0 + mu))
+        assert_close(p, jnp.full((n,), -lr * (2.0 + mu)))
+
+    def test_zero_grad_zero_momentum_is_identity(self):
+        r = rng(4)
+        p = randf(r, 1000)
+        v = jnp.zeros_like(p)
+        g = jnp.zeros_like(p)
+        pk, vk = K.sgd_update(p, v, g, lr=0.01, momentum=0.9)
+        assert_close(pk, p)
+        assert float(jnp.abs(vk).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# tiling helpers
+
+
+class TestTiling:
+    @given(st.integers(1, 512))
+    @settings(max_examples=100, deadline=None)
+    def test_batch_tile_divides(self, b):
+        assert b % pick_batch_tile(b) == 0
+
+    @given(st.integers(1, 8192))
+    @settings(max_examples=100, deadline=None)
+    def test_row_tile_divides(self, m):
+        assert m % pick_row_tile(m) == 0
+
+    def test_artifact_batches(self):
+        # Perf-pass tile choices (EXPERIMENTS.md §Perf L1): 10 at the
+        # paper batch, 8 at the test batch.
+        assert pick_batch_tile(100) == 10
+        assert pick_batch_tile(16) == 8

@@ -1,0 +1,33 @@
+//! Regenerates paper Fig 3a: device training time per round when the
+//! mobile device holds **25%** of the dataset and moves at 50% / 90% of
+//! training — FedFly vs SplitFed, all four testbed devices, SP2.
+//!
+//! Run with: `cargo bench --bench bench_fig3a`
+
+mod harness;
+
+use fedfly::experiments::{fig3a, load_meta, render_fig3};
+
+fn main() {
+    let meta = load_meta().expect("run `make artifacts` first");
+    harness::header("Fig 3a — 25% data on the mobile device (SP2, paper-scale sim)");
+    let (rows, secs) = {
+        let t0 = std::time::Instant::now();
+        let rows = fig3a(&meta).expect("fig3a");
+        (rows, t0.elapsed().as_secs_f64())
+    };
+    print!("{}", render_fig3(&rows, "Fig 3a"));
+    println!("(generated in {secs:.2}s)");
+
+    // Paper-shape assertions: FedFly always wins; savings track f/(1+f).
+    for r in &rows {
+        assert!(r.fedfly_s < r.splitfed_s, "FedFly must outperform SplitFed: {r:?}");
+    }
+    let s50: Vec<f64> = rows.iter().filter(|r| r.stage == 0.5).map(|r| r.savings).collect();
+    let s90: Vec<f64> = rows.iter().filter(|r| r.stage == 0.9).map(|r| r.savings).collect();
+    println!(
+        "savings @50%: {:.1}% (paper: up to 33%) | @90%: {:.1}% (paper: up to 45%)",
+        s50.iter().fold(f64::MIN, |a, &b| a.max(b)) * 100.0,
+        s90.iter().fold(f64::MIN, |a, &b| a.max(b)) * 100.0,
+    );
+}

@@ -1,0 +1,28 @@
+//! Regenerates paper Fig 3b: device training time per round when the
+//! mobile device holds **50%** of the dataset (imbalanced) — FedFly vs
+//! SplitFed, all four testbed devices, SP2.
+//!
+//! Run with: `cargo bench --bench bench_fig3b`
+
+mod harness;
+
+use fedfly::experiments::{fig3a, fig3b, load_meta, render_fig3};
+
+fn main() {
+    let meta = load_meta().expect("run `make artifacts` first");
+    harness::header("Fig 3b — 50% data on the mobile device (SP2, paper-scale sim)");
+    let rows = fig3b(&meta).expect("fig3b");
+    print!("{}", render_fig3(&rows, "Fig 3b"));
+
+    // Paper claims: FedFly always wins, and Fig-3b times exceed Fig-3a's
+    // (the mobile device trains twice the data).
+    let rows_a = fig3a(&meta).expect("fig3a");
+    for (rb, ra) in rows.iter().zip(&rows_a) {
+        assert!(rb.fedfly_s < rb.splitfed_s);
+        assert!(
+            rb.fedfly_s > ra.fedfly_s,
+            "50%-data device should train longer than 25%-data device"
+        );
+    }
+    println!("check OK: FedFly wins everywhere; 3b times > 3a times");
+}

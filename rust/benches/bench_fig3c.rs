@@ -1,0 +1,29 @@
+//! Regenerates paper Fig 3c: the split-point sweep — device training time
+//! per round at SP1/SP2/SP3 (25% data on the mobile device, move at 90%).
+//!
+//! Run with: `cargo bench --bench bench_fig3c`
+
+mod harness;
+
+use fedfly::experiments::{fig3c, load_meta, render_fig3};
+
+fn main() {
+    let meta = load_meta().expect("run `make artifacts` first");
+    harness::header("Fig 3c — split-point sweep (25% data, move at 90%, paper-scale sim)");
+    let rows = fig3c(&meta).expect("fig3c");
+    print!("{}", render_fig3(&rows, "Fig 3c"));
+
+    // Paper claims: time increases SP1 -> SP3 (more layers on the device);
+    // FedFly wins at every split point; checkpoint overhead stays ~flat
+    // ("the data that is checkpointed did not change significantly").
+    assert!(rows[0].fedfly_s < rows[1].fedfly_s && rows[1].fedfly_s < rows[2].fedfly_s);
+    for r in &rows {
+        assert!(r.fedfly_s < r.splitfed_s);
+    }
+    let omin = rows.iter().map(|r| r.migration_overhead_s).fold(f64::MAX, f64::min);
+    let omax = rows.iter().map(|r| r.migration_overhead_s).fold(f64::MIN, f64::max);
+    println!(
+        "checkpoint overhead across SPs: {omin:.3}s..{omax:.3}s (paper: ~constant, <=2s)"
+    );
+    assert!(omax < 2.0, "overhead exceeded the paper's 2s bound");
+}

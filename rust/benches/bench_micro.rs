@@ -1,0 +1,86 @@
+//! Micro-benches of the L3 hot paths: PJRT phase executions (the request
+//! path), FedAvg aggregation, synthetic-data generation, and the wire
+//! protocol — the inputs to EXPERIMENTS.md §Perf.
+//!
+//! Run with: `cargo bench --bench bench_micro`
+
+mod harness;
+
+use fedfly::data::SyntheticCifar;
+use fedfly::experiments::load_meta;
+use fedfly::fl::{Contribution, GlobalModel};
+use fedfly::proto::{read_msg, write_msg, Msg};
+use fedfly::runtime::Engine;
+use fedfly::split::{DeviceState, ServerState, SplitEngine};
+
+fn main() {
+    let meta = load_meta().expect("run `make artifacts` first");
+    let engine = Engine::new(meta.manifest.clone()).expect("engine");
+
+    // ---- PJRT phase latency (batch 16 and 100, SP2) ----------------------
+    harness::header("PJRT phase execution latency (request path)");
+    let ds = SyntheticCifar::new(0, 256);
+    for &b in &[16usize, 100] {
+        let se = SplitEngine::new(&engine, meta.clone(), b).expect("split engine");
+        se.warm_up(2).expect("warm");
+        let global = meta.init_params(1);
+        let mut dev = DeviceState::from_global(&meta, 2, &global).unwrap();
+        let mut srv = ServerState::from_global(&meta, 2, &global).unwrap();
+        let idxs: Vec<usize> = (0..b).collect();
+        let (x, y) = ds.batch(&idxs);
+        harness::bench(&format!("split/train_batch-sp2-b{b}"), 2, 10, || {
+            se.train_batch(&mut dev, &mut srv, &x, &y).unwrap()
+        });
+        let mut full = global.clone();
+        let mut mom = vec![0.0f32; full.len()];
+        harness::bench(&format!("split/full_step-b{b}"), 2, 10, || {
+            se.full_step(&mut full, &mut mom, &x, &y).unwrap()
+        });
+        harness::bench(&format!("split/eval_logits-b{b}"), 2, 10, || {
+            se.eval_logits(&global, &x).unwrap()
+        });
+    }
+
+    // ---- FedAvg aggregation ----------------------------------------------
+    harness::header("FedAvg aggregation (4 devices x 582k params)");
+    let n = meta.total_params();
+    let contributions: Vec<Contribution> = (0..4)
+        .map(|d| Contribution {
+            device: d,
+            params: vec![d as f32 * 0.1; n],
+            weight: 1.0 + d as f64,
+        })
+        .collect();
+    harness::bench("fl/aggregate-4x582k", 2, 20, || {
+        let mut g = GlobalModel::new(vec![0.0; n]);
+        g.aggregate(&contributions).unwrap();
+        g
+    });
+
+    // ---- data generation ---------------------------------------------------
+    harness::header("Synthetic CIFAR generation");
+    let big = SyntheticCifar::new(3, 100_000);
+    let idxs: Vec<usize> = (0..100).collect();
+    harness::bench("data/batch-100-images", 2, 20, || big.batch(&idxs));
+
+    // ---- wire protocol -------------------------------------------------------
+    harness::header("Wire protocol (frame + crc), 2.25MB params message");
+    let msg = Msg::GlobalParams {
+        round: 1,
+        params: vec![0.5; n],
+    };
+    harness::bench("proto/write+read-582k-params", 2, 20, || {
+        let mut buf = Vec::with_capacity(n * 4 + 64);
+        write_msg(&mut buf, &msg).unwrap();
+        read_msg(&mut buf.as_slice()).unwrap()
+    });
+
+    // ---- engine stats summary -------------------------------------------------
+    let s = engine.stats();
+    println!(
+        "\nengine totals: {} executions, {:.3}s PJRT time ({:.2} ms/exec avg)",
+        s.executions,
+        s.exec_seconds,
+        if s.executions > 0 { s.exec_seconds * 1e3 / s.executions as f64 } else { 0.0 }
+    );
+}

@@ -1,0 +1,48 @@
+//! Regenerates the paper's migration-overhead claim (§V-B: "up to two
+//! seconds"): checkpoint size, measured encode+TCP+decode on localhost,
+//! and the simulated 75 Mbps testbed transfer, per split point; plus
+//! codec micro-benches (the coordinator-side cost of migration).
+//!
+//! Run with: `cargo bench --bench bench_overhead`
+
+mod harness;
+
+use fedfly::experiments::{load_meta, overhead, render_overhead};
+use fedfly::migration::codec::{decode, encode, Checkpoint};
+
+fn main() {
+    let meta = load_meta().expect("run `make artifacts` first");
+
+    harness::header("Migration overhead per split point (batch 100)");
+    let rows = overhead(&meta, 100).expect("overhead");
+    print!("{}", render_overhead(&rows));
+    for r in &rows {
+        assert!(r.simulated_s < 2.0, "simulated overhead >= 2s at SP{}", r.sp);
+        assert!(r.measured_s < 2.0);
+    }
+
+    harness::header("Checkpoint codec throughput (SP2-sized state)");
+    let ns = meta.server_params(2).expect("sp2");
+    let ck = Checkpoint {
+        device_id: 1,
+        sp: 2,
+        round: 50,
+        epoch: 0,
+        batch_idx: 9,
+        loss: 1.5,
+        server_params: vec![0.25; ns],
+        server_momentum: vec![0.5; ns],
+        grad_smashed: vec![0.1; 100 * 8 * 8 * 64],
+        rng_state: [1, 2, 3, 4],
+    };
+    let blob = encode(&ck);
+    let mb = blob.len() as f64 / 1e6;
+    let enc = harness::bench("codec/encode-sp2", 2, 20, || encode(&ck));
+    let dec = harness::bench("codec/decode-sp2", 2, 20, || decode(&blob).unwrap());
+    println!(
+        "checkpoint {:.2} MB: encode {:.0} MB/s, decode {:.0} MB/s",
+        mb,
+        mb / enc.mean_s,
+        mb / dec.mean_s
+    );
+}

@@ -1,0 +1,57 @@
+//! Shared mini bench harness (criterion is unavailable offline).
+//!
+//! Provides warm-up + repeated timing with mean/std/min reporting, and a
+//! uniform header so `cargo bench` output is easy to scrape into
+//! EXPERIMENTS.md.
+
+#![allow(dead_code)]
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples
+        .iter()
+        .map(|x| (x - mean) * (x - mean))
+        .sum::<f64>()
+        / samples.len().max(1) as f64;
+    let min = samples.iter().copied().fold(f64::INFINITY, f64::min);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: min,
+    };
+    println!(
+        "bench {:<44} {:>10.3} ms/iter (±{:>7.3}, min {:>9.3}, n={})",
+        r.name,
+        r.mean_s * 1e3,
+        r.std_s * 1e3,
+        r.min_s * 1e3,
+        r.iters
+    );
+    r
+}
+
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}

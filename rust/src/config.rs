@@ -1,0 +1,264 @@
+//! Experiment configuration: the knobs of a FedFly training run, JSON
+//! (de)serialization, and presets matching the paper's testbed.
+
+use crate::error::{Error, Result};
+use crate::json::{self, Value};
+use crate::migration::{MigrationRoute, Strategy};
+use crate::mobility::Schedule;
+use crate::netsim::NetModel;
+use crate::timesim::{profiles, ComputeProfile};
+
+/// Whether training actually executes HLO or only accounts simulated time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Execute every phase via PJRT (true training; losses/accuracy real).
+    Real,
+    /// Account simulated testbed time only (paper-scale timing figures).
+    SimOnly,
+}
+
+/// Full description of one FL run.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// FL rounds (paper: 100).
+    pub rounds: u64,
+    /// Batch size; must match an artifact variant (100 or 16).
+    pub batch: usize,
+    /// Split point 1..=3 (paper default SP2).
+    pub sp: usize,
+    /// Virtual training-set size (paper: 50_000).
+    pub train_samples: usize,
+    /// Virtual test-set size (paper: 10_000).
+    pub test_samples: usize,
+    /// Per-device dataset fractions (sum <= 1).
+    pub fractions: Vec<f64>,
+    /// Per-device compute profiles.
+    pub device_profiles: Vec<ComputeProfile>,
+    /// Initial device -> edge assignment.
+    pub initial_edge: Vec<usize>,
+    /// Edge-server compute profiles.
+    pub edge_profiles: Vec<ComputeProfile>,
+    /// Network model (75 Mbps Wi-Fi testbed by default).
+    pub net: NetModel,
+    /// FedFly vs SplitFed-restart.
+    pub strategy: Strategy,
+    /// Edge-to-edge or device-relayed checkpoints.
+    pub route: MigrationRoute,
+    /// Mobility schedule.
+    pub schedule: Schedule,
+    /// Real training or simulate-only.
+    pub exec: ExecMode,
+    /// Evaluate accuracy every N rounds (Real mode only).
+    pub eval_every: Option<u64>,
+    /// RNG seed for init/sharding/batch order.
+    pub seed: u64,
+    /// Failure injection: probability that a FedFly checkpoint transfer
+    /// is lost/corrupted in transit, forcing a restart fallback at the
+    /// destination edge (0.0 = reliable network).
+    pub fault_loss_prob: f64,
+}
+
+impl RunConfig {
+    /// The paper's testbed: 2x Pi3 + 2x Pi4 devices, i5 + i7 edge servers,
+    /// devices 0,1 on edge 0 and devices 2,3 on edge 1; balanced data;
+    /// SP2; batch 100; no mobility; simulate-only.
+    pub fn paper_testbed() -> Self {
+        RunConfig {
+            rounds: 100,
+            batch: 100,
+            sp: 2,
+            train_samples: 50_000,
+            test_samples: 10_000,
+            fractions: vec![0.25; 4],
+            device_profiles: vec![profiles::PI3, profiles::PI3, profiles::PI4, profiles::PI4],
+            initial_edge: vec![0, 0, 1, 1],
+            edge_profiles: vec![profiles::EDGE_I5, profiles::EDGE_I7],
+            net: NetModel::default(),
+            strategy: Strategy::FedFly,
+            route: MigrationRoute::EdgeToEdge,
+            schedule: Schedule::none(),
+            exec: ExecMode::SimOnly,
+            eval_every: None,
+            seed: 7,
+            fault_loss_prob: 0.0,
+        }
+    }
+
+    /// A scaled-down configuration that really trains on this host:
+    /// batch-16 artifacts, small synthetic dataset, evaluation on.
+    pub fn small_real() -> Self {
+        let mut c = Self::paper_testbed();
+        c.rounds = 10;
+        c.batch = 16;
+        c.train_samples = 640;
+        c.test_samples = 160;
+        c.exec = ExecMode::Real;
+        c.eval_every = Some(2);
+        c
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.fractions.len()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edge_profiles.len()
+    }
+
+    /// Sanity-check the topology and parameters.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.n_devices();
+        if n == 0 {
+            return Err(Error::Config("no devices".into()));
+        }
+        if self.device_profiles.len() != n || self.initial_edge.len() != n {
+            return Err(Error::Config(
+                "fractions/device_profiles/initial_edge lengths differ".into(),
+            ));
+        }
+        if self.n_edges() == 0 {
+            return Err(Error::Config("no edge servers".into()));
+        }
+        if let Some(&bad) = self.initial_edge.iter().find(|&&e| e >= self.n_edges()) {
+            return Err(Error::Config(format!("initial edge {bad} out of range")));
+        }
+        for e in self.schedule.events() {
+            if e.device >= n {
+                return Err(Error::Config(format!("schedule device {} out of range", e.device)));
+            }
+            if e.to_edge >= self.n_edges() {
+                return Err(Error::Config(format!("schedule edge {} out of range", e.to_edge)));
+            }
+            if e.round >= self.rounds {
+                return Err(Error::Config(format!(
+                    "schedule round {} beyond run ({} rounds)",
+                    e.round, self.rounds
+                )));
+            }
+        }
+        let f: f64 = self.fractions.iter().sum();
+        if f > 1.0 + 1e-9 {
+            return Err(Error::Config(format!("fractions sum to {f} > 1")));
+        }
+        if !(1..=3).contains(&self.sp) {
+            return Err(Error::Config(format!("sp {} not in 1..=3", self.sp)));
+        }
+        if self.rounds == 0 {
+            return Err(Error::Config("rounds == 0".into()));
+        }
+        if !(0.0..=1.0).contains(&self.fault_loss_prob) {
+            return Err(Error::Config(format!(
+                "fault_loss_prob {} not in [0,1]",
+                self.fault_loss_prob
+            )));
+        }
+        Ok(())
+    }
+
+    /// JSON encoding (for experiment provenance files).
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("rounds", json::num(self.rounds as f64)),
+            ("batch", json::num(self.batch as f64)),
+            ("sp", json::num(self.sp as f64)),
+            ("train_samples", json::num(self.train_samples as f64)),
+            ("test_samples", json::num(self.test_samples as f64)),
+            (
+                "fractions",
+                json::arr(self.fractions.iter().map(|&f| json::num(f)).collect()),
+            ),
+            (
+                "device_profiles",
+                json::arr(
+                    self.device_profiles
+                        .iter()
+                        .map(|p| json::s(p.name))
+                        .collect(),
+                ),
+            ),
+            (
+                "initial_edge",
+                json::arr(
+                    self.initial_edge
+                        .iter()
+                        .map(|&e| json::num(e as f64))
+                        .collect(),
+                ),
+            ),
+            ("strategy", json::s(self.strategy.name())),
+            (
+                "exec",
+                json::s(match self.exec {
+                    ExecMode::Real => "real",
+                    ExecMode::SimOnly => "sim",
+                }),
+            ),
+            ("seed", json::num(self.seed as f64)),
+            (
+                "moves",
+                json::arr(
+                    self.schedule
+                        .events()
+                        .iter()
+                        .map(|e| {
+                            json::arr(vec![
+                                json::num(e.round as f64),
+                                json::num(e.device as f64),
+                                json::num(e.to_edge as f64),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mobility::Schedule;
+
+    #[test]
+    fn paper_testbed_is_valid() {
+        RunConfig::paper_testbed().validate().unwrap();
+        RunConfig::small_real().validate().unwrap();
+    }
+
+    #[test]
+    fn validation_catches_bad_edges() {
+        let mut c = RunConfig::paper_testbed();
+        c.initial_edge[0] = 9;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_schedule() {
+        let mut c = RunConfig::paper_testbed();
+        c.schedule = Schedule::at_fraction(0, 0.5, 100, 7);
+        assert!(c.validate().is_err());
+
+        let mut c = RunConfig::paper_testbed();
+        c.rounds = 10;
+        c.schedule = Schedule::at_fraction(0, 0.5, 100, 1); // round 50 > 10
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_fraction_overflow() {
+        let mut c = RunConfig::paper_testbed();
+        c.fractions = vec![0.5; 4];
+        c.device_profiles = vec![profiles::PI3; 4];
+        c.initial_edge = vec![0; 4];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_encoding_parses() {
+        let c = RunConfig::paper_testbed();
+        let text = json::to_string_pretty(&c.to_json());
+        let v = json::parse(&text).unwrap();
+        assert_eq!(v.get_usize("rounds").unwrap(), 100);
+        assert_eq!(v.get_str("strategy").unwrap(), "fedfly");
+    }
+}

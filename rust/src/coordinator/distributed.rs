@@ -1,0 +1,792 @@
+//! Distributed deployment: the FedFly protocol over real TCP sockets.
+//!
+//! Mirrors the paper's testbed processes — one central server, N edge
+//! servers, M devices — each runnable as a standalone process (see the
+//! `fedfly central|edge|device` subcommands) or wired up in threads on
+//! localhost ([`run_in_threads`], used by the `distributed_testbed`
+//! example and the integration tests).
+//!
+//! Data plane per batch: the device executes `device_fwd`, ships the
+//! smashed activation (`Msg::Smashed`), the edge executes `server_step`
+//! and returns the smashed gradient (`Msg::SmashedGrad`), the device
+//! executes `device_bwd`.  Control plane per round: `Msg::Resume` (device
+//! asks for round parameters), `Msg::LocalUpdate` (device half; the edge
+//! appends its server half and forwards to the central), `GlobalParams`
+//! broadcast after FedAvg.  Migration: `Msg::MoveNotice` makes the source
+//! edge checkpoint the device's server-side state and ship it to the
+//! destination edge (`Msg::CheckpointTransfer`) exactly as in Fig 2.
+//!
+//! Threading: the PJRT client is not `Send`, so every compute-owning actor
+//! (each edge server, each device) owns a *private* [`Engine`].  Edge
+//! connection handlers are pure I/O threads that forward requests to the
+//! edge's single worker thread over a channel — the same
+//! router-in-front-of-a-worker shape vLLM-style serving routers use.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use crate::config::RunConfig;
+use crate::data::{partition, BatchIter, SyntheticCifar};
+use crate::error::{Error, Result};
+use crate::fl::{Contribution, GlobalModel};
+use crate::manifest::Manifest;
+use crate::migration::codec::{decode, encode, Checkpoint};
+use crate::migration::Strategy;
+use crate::model::ModelMeta;
+use crate::proto::{read_msg, write_msg, Msg};
+use crate::runtime::{Engine, HostTensor};
+use crate::split::{DeviceState, ServerState};
+use crate::util::Rng;
+
+// ---------------------------------------------------------------------------
+// Central server
+
+/// Run the central server: accept `n_edges` edges, distribute the initial
+/// global model, aggregate `n_devices` updates per round for `rounds`
+/// rounds, and return the final global parameters.
+pub fn run_central(
+    listener: TcpListener,
+    n_edges: usize,
+    n_devices: usize,
+    rounds: u64,
+    init_params: Vec<f32>,
+) -> Result<Vec<f32>> {
+    let mut edges: Vec<TcpStream> = Vec::with_capacity(n_edges);
+    for _ in 0..n_edges {
+        let (mut s, _) = listener.accept()?;
+        s.set_nodelay(true)?;
+        match read_msg(&mut s)? {
+            Msg::Hello { role, .. } if role == "edge" => {
+                write_msg(&mut s, &Msg::Ack { code: 0 })?;
+                edges.push(s);
+            }
+            other => return Err(Error::Proto(format!("expected edge hello, got {other:?}"))),
+        }
+    }
+
+    // Fan updates in from all edges through one channel.
+    let (tx, rx) = mpsc::channel::<Contribution>();
+    for s in &edges {
+        let mut rs = s.try_clone()?;
+        let tx = tx.clone();
+        std::thread::spawn(move || loop {
+            match read_msg(&mut rs) {
+                Ok(Msg::LocalUpdate {
+                    device,
+                    weight,
+                    params,
+                }) => {
+                    if tx
+                        .send(Contribution {
+                            device: device as usize,
+                            params,
+                            weight,
+                        })
+                        .is_err()
+                    {
+                        break;
+                    }
+                }
+                Ok(Msg::Bye) | Err(_) => break,
+                Ok(_) => {}
+            }
+        });
+    }
+
+    let mut global = GlobalModel::new(init_params);
+    for round in 0..rounds {
+        for s in &mut edges {
+            write_msg(
+                s,
+                &Msg::GlobalParams {
+                    round,
+                    params: global.params.clone(),
+                },
+            )?;
+        }
+        let mut contributions = Vec::with_capacity(n_devices);
+        for _ in 0..n_devices {
+            contributions.push(
+                rx.recv()
+                    .map_err(|_| Error::Proto("update channel closed".into()))?,
+            );
+        }
+        global.aggregate(&contributions)?;
+    }
+    for s in &mut edges {
+        let _ = write_msg(s, &Msg::Bye);
+    }
+    Ok(global.params)
+}
+
+// ---------------------------------------------------------------------------
+// Edge server (worker-actor + I/O threads)
+
+/// Work items flowing into the edge worker.
+enum Work {
+    /// Round params pushed by the central server.
+    Global { round: u64, params: Vec<f32> },
+    /// A device connection asks for round `wanted`'s parameters.
+    Resume {
+        wanted: u64,
+        reply: mpsc::Sender<Msg>,
+    },
+    /// A request needing edge state / compute; reply goes back to the
+    /// connection thread.
+    Request { msg: Msg, reply: mpsc::Sender<Msg> },
+    /// Stop the worker.
+    Shutdown,
+}
+
+/// Handle to a running edge server.
+pub struct EdgeHandle {
+    pub addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    work_tx: mpsc::Sender<Work>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    worker_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EdgeHandle {
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _ = self.work_tx.send(Work::Shutdown);
+        let _ = TcpStream::connect(self.addr); // unblock accept()
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.worker_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start an edge server on `listener`, connected to `central_addr`.
+/// `peers[i]` must be edge i's listener address (including our own).
+pub fn start_edge(
+    listener: TcpListener,
+    edge_id: u64,
+    central_addr: SocketAddr,
+    peers: Vec<SocketAddr>,
+    manifest: Arc<Manifest>,
+    sp: usize,
+    batch: usize,
+) -> Result<EdgeHandle> {
+    let addr = listener.local_addr()?;
+    let mut central = TcpStream::connect(central_addr)?;
+    central.set_nodelay(true)?;
+    write_msg(
+        &mut central,
+        &Msg::Hello {
+            role: "edge".into(),
+            id: edge_id,
+        },
+    )?;
+    match read_msg(&mut central)? {
+        Msg::Ack { code: 0 } => {}
+        other => return Err(Error::Proto(format!("central rejected: {other:?}"))),
+    }
+
+    let (work_tx, work_rx) = mpsc::channel::<Work>();
+
+    // Reader thread: central broadcasts -> worker.
+    {
+        let tx = work_tx.clone();
+        let mut rs = central.try_clone()?;
+        std::thread::spawn(move || loop {
+            match read_msg(&mut rs) {
+                Ok(Msg::GlobalParams { round, params }) => {
+                    if tx.send(Work::Global { round, params }).is_err() {
+                        break;
+                    }
+                }
+                Ok(Msg::Bye) | Err(_) => break,
+                Ok(_) => {}
+            }
+        });
+    }
+
+    // Worker thread: owns the Engine and all edge state.
+    let worker_thread = {
+        let meta = ModelMeta::new(manifest.clone());
+        std::thread::Builder::new()
+            .name(format!("edge-{edge_id}"))
+            .spawn(move || {
+                if let Err(e) = edge_worker(work_rx, central, peers, manifest, meta, sp, batch) {
+                    crate::util::logging::log(
+                        crate::util::logging::Level::Error,
+                        "edge",
+                        format_args!("edge worker failed: {e}"),
+                    );
+                }
+            })
+            .map_err(Error::Io)?
+    };
+
+    // Accept loop: spawn an I/O thread per connection.
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let sd = shutdown.clone();
+    let conn_tx = work_tx.clone();
+    let accept_thread = std::thread::spawn(move || {
+        while !sd.load(Ordering::SeqCst) {
+            let Ok((stream, _)) = listener.accept() else {
+                break;
+            };
+            if sd.load(Ordering::SeqCst) {
+                break;
+            }
+            let tx = conn_tx.clone();
+            std::thread::spawn(move || {
+                let _ = handle_edge_conn(stream, tx);
+            });
+        }
+    });
+
+    Ok(EdgeHandle {
+        addr,
+        shutdown,
+        work_tx,
+        accept_thread: Some(accept_thread),
+        worker_thread: Some(worker_thread),
+    })
+}
+
+/// The edge worker: single thread owning the Engine, the per-device
+/// server states, the migrated-checkpoint inbox and the central uplink.
+fn edge_worker(
+    work_rx: mpsc::Receiver<Work>,
+    mut central: TcpStream,
+    peers: Vec<SocketAddr>,
+    manifest: Arc<Manifest>,
+    meta: ModelMeta,
+    sp: usize,
+    batch: usize,
+) -> Result<()> {
+    let engine = Engine::new(manifest)?;
+    let mut states: HashMap<u64, ServerState> = HashMap::new();
+    let mut inbox: HashMap<u64, Checkpoint> = HashMap::new();
+    let mut global: Option<(u64, Vec<f32>)> = None;
+    let mut pending_resumes: Vec<(u64, mpsc::Sender<Msg>)> = Vec::new();
+
+    let serve_resumes =
+        |global: &Option<(u64, Vec<f32>)>, pending: &mut Vec<(u64, mpsc::Sender<Msg>)>| {
+            if let Some((round, params)) = global {
+                pending.retain(|(wanted, reply)| {
+                    if *round >= *wanted {
+                        let _ = reply.send(Msg::GlobalParams {
+                            round: *round,
+                            params: params.clone(),
+                        });
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+        };
+
+    while let Ok(work) = work_rx.recv() {
+        match work {
+            Work::Shutdown => break,
+            Work::Global { round, params } => {
+                global = Some((round, params));
+                serve_resumes(&global, &mut pending_resumes);
+            }
+            Work::Resume { wanted, reply } => {
+                pending_resumes.push((wanted, reply));
+                serve_resumes(&global, &mut pending_resumes);
+            }
+            Work::Request { msg, reply } => match msg {
+                Msg::Smashed {
+                    device,
+                    data,
+                    labels,
+                } => {
+                    let out = edge_server_step(
+                        &engine, &meta, sp, batch, &mut states, &mut inbox, &global, device,
+                        &data, &labels,
+                    )?;
+                    let _ = reply.send(out);
+                }
+                Msg::LocalUpdate {
+                    device,
+                    weight,
+                    params: dev_params,
+                } => {
+                    let srv = states.get(&device).ok_or_else(|| {
+                        Error::Proto(format!("update from unknown device {device}"))
+                    })?;
+                    let mut full = dev_params;
+                    full.extend_from_slice(&srv.params);
+                    write_msg(
+                        &mut central,
+                        &Msg::LocalUpdate {
+                            device,
+                            weight,
+                            params: full,
+                        },
+                    )?;
+                    let _ = reply.send(Msg::Ack { code: 0 });
+                }
+                Msg::MoveNotice { device, dest_edge } => {
+                    // FedFly Steps 7-8: checkpoint + transfer to the
+                    // destination edge over its socket.
+                    let code = match states.remove(&device) {
+                        Some(srv) => {
+                            let dest = *peers.get(dest_edge as usize).ok_or_else(|| {
+                                Error::Proto(format!("unknown destination edge {dest_edge}"))
+                            })?;
+                            let ck = Checkpoint {
+                                device_id: device,
+                                sp: srv.sp as u32,
+                                round: global.as_ref().map_or(0, |(r, _)| *r),
+                                epoch: 0,
+                                batch_idx: srv.batches_done,
+                                loss: srv.last_loss,
+                                server_params: srv.params,
+                                server_momentum: srv.momentum,
+                                grad_smashed: srv.last_grad_smashed,
+                                rng_state: [0; 4],
+                            };
+                            let mut peer = TcpStream::connect(dest)?;
+                            peer.set_nodelay(true)?;
+                            write_msg(
+                                &mut peer,
+                                &Msg::CheckpointTransfer {
+                                    device,
+                                    blob: encode(&ck),
+                                },
+                            )?;
+                            match read_msg(&mut peer)? {
+                                Msg::Ack { code: 0 } => 0,
+                                _ => 3,
+                            }
+                        }
+                        None => 4, // nothing to migrate (device never trained here)
+                    };
+                    let _ = reply.send(Msg::Ack { code });
+                }
+                Msg::CheckpointTransfer { device, blob } => {
+                    let code = match decode(&blob) {
+                        Ok(ck) => {
+                            inbox.insert(device, ck);
+                            0
+                        }
+                        Err(_) => 1,
+                    };
+                    let _ = reply.send(Msg::Ack { code });
+                }
+                other => {
+                    let _ = reply.send(Msg::Ack { code: 9 });
+                    return Err(Error::Proto(format!("unexpected request {other:?}")));
+                }
+            },
+        }
+    }
+    Ok(())
+}
+
+/// Execute the edge-side training step for one smashed batch.
+#[allow(clippy::too_many_arguments)]
+fn edge_server_step(
+    engine: &Engine,
+    meta: &ModelMeta,
+    sp: usize,
+    batch: usize,
+    states: &mut HashMap<u64, ServerState>,
+    inbox: &mut HashMap<u64, Checkpoint>,
+    global: &Option<(u64, Vec<f32>)>,
+    device: u64,
+    smashed: &[f32],
+    labels_f: &[f32],
+) -> Result<Msg> {
+    // Materialize the device's server-side state: migrated-in checkpoint
+    // first (FedFly), otherwise fresh from the current global (new device,
+    // or SplitFed restart after a move).
+    if !states.contains_key(&device) {
+        let state = if let Some(ck) = inbox.remove(&device) {
+            ServerState {
+                sp,
+                params: ck.server_params,
+                momentum: ck.server_momentum,
+                last_grad_smashed: ck.grad_smashed,
+                last_loss: ck.loss,
+                batches_done: ck.batch_idx,
+            }
+        } else {
+            let (_, params) = global
+                .as_ref()
+                .ok_or_else(|| Error::Proto("no global params yet".into()))?;
+            ServerState::from_global(meta, sp, params)?
+        };
+        states.insert(device, state);
+    }
+    let smash_shape = {
+        let s = &meta.manifest.split(sp)?.smashed_shape;
+        vec![batch, s[0], s[1], s[2]]
+    };
+    let labels: Vec<i32> = labels_f.iter().map(|&x| x as i32).collect();
+    let name = meta.server_step_name(sp, batch);
+    let st = states.get_mut(&device).unwrap();
+    let mut out = engine.execute(
+        &name,
+        &[
+            HostTensor::f32(&st.params, vec![st.params.len()]),
+            HostTensor::f32(&st.momentum, vec![st.momentum.len()]),
+            HostTensor::f32(smashed, smash_shape),
+            HostTensor::i32(&labels, vec![batch]),
+        ],
+    )?;
+    let loss = out.pop().unwrap()[0];
+    let grad = out.pop().unwrap();
+    st.momentum = out.pop().unwrap();
+    st.params = out.pop().unwrap();
+    st.last_grad_smashed = grad.clone();
+    st.last_loss = loss;
+    st.batches_done += 1;
+    Ok(Msg::SmashedGrad {
+        device,
+        data: grad,
+        loss,
+    })
+}
+
+/// Serve one inbound connection: forward requests to the worker, relay
+/// replies back over the socket.
+fn handle_edge_conn(mut stream: TcpStream, work_tx: mpsc::Sender<Work>) -> Result<()> {
+    stream.set_nodelay(true)?;
+    let mut next_round: u64 = 0;
+    loop {
+        let msg = match read_msg(&mut stream) {
+            Ok(m) => m,
+            Err(_) => return Ok(()), // peer closed
+        };
+        match msg {
+            Msg::Hello { .. } => {
+                write_msg(&mut stream, &Msg::Ack { code: 0 })?;
+            }
+            Msg::Resume { .. } => {
+                let (tx, rx) = mpsc::channel();
+                work_tx
+                    .send(Work::Resume {
+                        wanted: next_round,
+                        reply: tx,
+                    })
+                    .map_err(|_| Error::Proto("edge worker gone".into()))?;
+                let reply = rx
+                    .recv()
+                    .map_err(|_| Error::Proto("edge worker dropped reply".into()))?;
+                if let Msg::GlobalParams { round, .. } = &reply {
+                    next_round = round + 1;
+                }
+                write_msg(&mut stream, &reply)?;
+            }
+            Msg::Bye => return Ok(()),
+            other => {
+                let (tx, rx) = mpsc::channel();
+                work_tx
+                    .send(Work::Request {
+                        msg: other,
+                        reply: tx,
+                    })
+                    .map_err(|_| Error::Proto("edge worker gone".into()))?;
+                let reply = rx
+                    .recv()
+                    .map_err(|_| Error::Proto("edge worker dropped reply".into()))?;
+                write_msg(&mut stream, &reply)?;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Device
+
+/// Configuration of one device process.
+#[derive(Clone)]
+pub struct DeviceConfig {
+    pub id: u64,
+    pub sp: usize,
+    pub batch: usize,
+    pub rounds: u64,
+    /// Edge listener addresses; index = edge id.
+    pub edges: Vec<SocketAddr>,
+    pub initial_edge: usize,
+    /// (round, destination edge) moves for this device.
+    pub moves: Vec<(u64, usize)>,
+    pub strategy: Strategy,
+    /// This device's shard of the synthetic dataset.
+    pub sample_indices: Vec<usize>,
+    pub data_seed: u64,
+    pub train_samples: usize,
+    pub rng_seed: u64,
+}
+
+/// Per-run device result.
+#[derive(Clone, Debug)]
+pub struct DeviceRunStats {
+    pub id: u64,
+    pub batches: usize,
+    pub mean_loss: f32,
+    pub final_loss: f32,
+    pub migrations: usize,
+    pub migration_seconds: f64,
+}
+
+/// Run one device to completion (paper Steps 1-9 from the device side).
+/// Creates its own private [`Engine`] (the PJRT client is not `Send`).
+pub fn run_device(
+    cfg: DeviceConfig,
+    manifest: Arc<Manifest>,
+) -> Result<DeviceRunStats> {
+    let engine = Engine::new(manifest.clone())?;
+    let meta = ModelMeta::new(manifest);
+    let ds = SyntheticCifar::new(cfg.data_seed ^ 0x7EA1, cfg.train_samples);
+    let shard = crate::data::Shard {
+        device: cfg.id as usize,
+        indices: cfg.sample_indices.clone(),
+    };
+    let mut rng = Rng::new(cfg.rng_seed);
+    let mut edge = cfg.initial_edge;
+    let mut conn = TcpStream::connect(cfg.edges[edge])?;
+    conn.set_nodelay(true)?;
+    write_msg(
+        &mut conn,
+        &Msg::Hello {
+            role: "device".into(),
+            id: cfg.id,
+        },
+    )?;
+    expect_ack(&mut conn)?;
+
+    let mut dev: Option<DeviceState> = None;
+    let mut loss_sum = 0.0f64;
+    let mut last_loss = f32::NAN;
+    let mut batches = 0usize;
+    let mut migrations = 0usize;
+    let mut migration_seconds = 0.0f64;
+
+    for round in 0..cfg.rounds {
+        // Mobility at the round boundary (paper Step 6').
+        if let Some(&(_, dest)) = cfg.moves.iter().find(|(r, _)| *r == round) {
+            if dest != edge {
+                let t0 = std::time::Instant::now();
+                if cfg.strategy == Strategy::FedFly {
+                    write_msg(
+                        &mut conn,
+                        &Msg::MoveNotice {
+                            device: cfg.id,
+                            dest_edge: dest as u64,
+                        },
+                    )?;
+                    expect_ack(&mut conn)?;
+                }
+                let _ = write_msg(&mut conn, &Msg::Bye);
+                conn = TcpStream::connect(cfg.edges[dest])?;
+                conn.set_nodelay(true)?;
+                write_msg(
+                    &mut conn,
+                    &Msg::Hello {
+                        role: "device".into(),
+                        id: cfg.id,
+                    },
+                )?;
+                expect_ack(&mut conn)?;
+                edge = dest;
+                migrations += 1;
+                migration_seconds += t0.elapsed().as_secs_f64();
+            }
+        }
+
+        // Fetch this round's global parameters (paper Steps 1/6).
+        write_msg(&mut conn, &Msg::Resume { device: cfg.id })?;
+        let (_, params) = match read_msg(&mut conn)? {
+            Msg::GlobalParams { round, params } => (round, params),
+            other => return Err(Error::Proto(format!("expected params, got {other:?}"))),
+        };
+        match &mut dev {
+            Some(d) => d.refresh_from_global(&params),
+            None => dev = Some(DeviceState::from_global(&meta, cfg.sp, &params)?),
+        }
+        let dev_state = dev.as_mut().unwrap();
+
+        // One local epoch (paper Steps 2/3).
+        let smash_shape = {
+            let s = &meta.manifest.split(cfg.sp)?.smashed_shape;
+            vec![cfg.batch, s[0], s[1], s[2]]
+        };
+        for idxs in BatchIter::new(&shard, cfg.batch, &mut rng) {
+            let (x, y) = ds.batch(&idxs);
+            let fwd = meta.device_fwd_name(cfg.sp, cfg.batch);
+            let smashed = engine
+                .execute(
+                    &fwd,
+                    &[
+                        HostTensor::f32(&dev_state.params, vec![dev_state.params.len()]),
+                        HostTensor::f32(&x, vec![cfg.batch, 32, 32, 3]),
+                    ],
+                )?
+                .pop()
+                .unwrap();
+            write_msg(
+                &mut conn,
+                &Msg::Smashed {
+                    device: cfg.id,
+                    data: smashed,
+                    labels: y.iter().map(|&v| v as f32).collect(),
+                },
+            )?;
+            let (grad, loss) = match read_msg(&mut conn)? {
+                Msg::SmashedGrad { data, loss, .. } => (data, loss),
+                other => return Err(Error::Proto(format!("expected grad, got {other:?}"))),
+            };
+            let bwd = meta.device_bwd_name(cfg.sp, cfg.batch);
+            let mut out = engine.execute(
+                &bwd,
+                &[
+                    HostTensor::f32(&dev_state.params, vec![dev_state.params.len()]),
+                    HostTensor::f32(&dev_state.momentum, vec![dev_state.momentum.len()]),
+                    HostTensor::f32(&x, vec![cfg.batch, 32, 32, 3]),
+                    HostTensor::f32(&grad, smash_shape.clone()),
+                ],
+            )?;
+            dev_state.momentum = out.pop().unwrap();
+            dev_state.params = out.pop().unwrap();
+            loss_sum += loss as f64;
+            last_loss = loss;
+            batches += 1;
+        }
+
+        // Send the device half upstream (paper Step 4).
+        write_msg(
+            &mut conn,
+            &Msg::LocalUpdate {
+                device: cfg.id,
+                weight: shard.len().max(1) as f64,
+                params: dev_state.params.clone(),
+            },
+        )?;
+        expect_ack(&mut conn)?;
+    }
+    let _ = write_msg(&mut conn, &Msg::Bye);
+    Ok(DeviceRunStats {
+        id: cfg.id,
+        batches,
+        mean_loss: if batches > 0 {
+            (loss_sum / batches as f64) as f32
+        } else {
+            f32::NAN
+        },
+        final_loss: last_loss,
+        migrations,
+        migration_seconds,
+    })
+}
+
+fn expect_ack(conn: &mut TcpStream) -> Result<()> {
+    match read_msg(conn)? {
+        Msg::Ack { code: 0 } => Ok(()),
+        other => Err(Error::Proto(format!("expected ack, got {other:?}"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// All-in-one localhost deployment
+
+/// Result of a threaded localhost deployment.
+#[derive(Debug)]
+pub struct DistributedRun {
+    pub final_params: Vec<f32>,
+    pub devices: Vec<DeviceRunStats>,
+}
+
+/// Run the full distributed protocol on localhost: one central thread,
+/// `cfg.n_edges()` edge servers, `cfg.n_devices()` device threads, all
+/// talking real TCP.  Every compute actor creates its own PJRT engine
+/// from the shared manifest.
+pub fn run_in_threads(cfg: &RunConfig, manifest: Arc<Manifest>) -> Result<DistributedRun> {
+    cfg.validate()?;
+    let n_devices = cfg.n_devices();
+    let n_edges = cfg.n_edges();
+    let meta = ModelMeta::new(manifest.clone());
+
+    let central_listener = TcpListener::bind("127.0.0.1:0")?;
+    let central_addr = central_listener.local_addr()?;
+
+    // Edge listeners must exist before the peer table is built.
+    let edge_listeners: Vec<TcpListener> = (0..n_edges)
+        .map(|_| TcpListener::bind("127.0.0.1:0"))
+        .collect::<std::io::Result<_>>()?;
+    let peers: Vec<SocketAddr> = edge_listeners
+        .iter()
+        .map(|l| l.local_addr())
+        .collect::<std::io::Result<_>>()?;
+
+    let init = meta.init_params(cfg.seed);
+    let rounds = cfg.rounds;
+    let central = std::thread::spawn(move || {
+        run_central(central_listener, n_edges, n_devices, rounds, init)
+    });
+
+    let mut edges = Vec::new();
+    for (i, l) in edge_listeners.into_iter().enumerate() {
+        edges.push(start_edge(
+            l,
+            i as u64,
+            central_addr,
+            peers.clone(),
+            manifest.clone(),
+            cfg.sp,
+            cfg.batch,
+        )?);
+    }
+
+    let shards = partition(cfg.train_samples, &cfg.fractions, cfg.seed);
+    let mut root_rng = Rng::new(cfg.seed);
+    let mut device_threads = Vec::new();
+    for d in 0..n_devices {
+        let dcfg = DeviceConfig {
+            id: d as u64,
+            sp: cfg.sp,
+            batch: cfg.batch,
+            rounds: cfg.rounds,
+            edges: peers.clone(),
+            initial_edge: cfg.initial_edge[d],
+            moves: cfg
+                .schedule
+                .events()
+                .iter()
+                .filter(|e| e.device == d)
+                .map(|e| (e.round, e.to_edge))
+                .collect(),
+            strategy: cfg.strategy,
+            sample_indices: shards[d].indices.clone(),
+            data_seed: cfg.seed,
+            train_samples: cfg.train_samples,
+            rng_seed: root_rng.fork(d as u64).state()[0],
+        };
+        let manifest = manifest.clone();
+        device_threads.push(std::thread::spawn(move || run_device(dcfg, manifest)));
+    }
+
+    let mut stats = Vec::new();
+    for t in device_threads {
+        stats.push(
+            t.join()
+                .map_err(|_| Error::other("device thread panicked"))??,
+        );
+    }
+    let final_params = central
+        .join()
+        .map_err(|_| Error::other("central thread panicked"))??;
+    for e in edges {
+        e.stop();
+    }
+    stats.sort_by_key(|s| s.id);
+    Ok(DistributedRun {
+        final_params,
+        devices: stats,
+    })
+}

@@ -1,0 +1,324 @@
+//! The FedFly coordinator: hierarchical cloud–edge–device FL with device
+//! mobility (paper §IV, Fig 1/2).
+//!
+//! [`Runner`] executes a full training run in-process: the central server,
+//! edge servers and devices are explicit states advanced round-by-round,
+//! with the mobility schedule applied at round boundaries exactly as in
+//! the paper's sequence diagram:
+//!
+//! 1. central initializes + distributes global parameters;
+//! 2/3. each device trains its split half against its edge server for one
+//!    local epoch (device fwd -> server step -> device bwd per batch);
+//! 4/5. local updates are FedAvg-aggregated at the central server;
+//! 6–9. when the schedule moves a device, the source edge checkpoints the
+//!    device's server-side state and FedFly transfers it to the
+//!    destination edge (through the same codec + transport as the real
+//!    socket path), or — SplitFed baseline — the state is dropped and the
+//!    destination restarts from the current global model.
+//!
+//! [`distributed`] runs the identical protocol across real TCP sockets.
+
+pub mod distributed;
+
+
+use crate::config::{ExecMode, RunConfig};
+use crate::data::{partition, BatchIter, Shard, SyntheticCifar};
+use crate::error::{Error, Result};
+use crate::fl::{Contribution, GlobalModel};
+use crate::metrics::{DeviceRound, RoundRecord, RunReport};
+use crate::migration::{
+    codec::Checkpoint, InMemTransport, MigrationRoute, Strategy, Transport,
+};
+use crate::model::ModelMeta;
+use crate::runtime::Engine;
+use crate::split::{accuracy_from_logits, concat_params, DeviceState, ServerState, SplitEngine};
+use crate::timesim::PairTimeModel;
+use crate::util::Rng;
+
+/// In-process FL runner.
+pub struct Runner {
+    cfg: RunConfig,
+    meta: ModelMeta,
+}
+
+/// Internal per-device mutable state.
+struct DeviceCtx {
+    shard: Shard,
+    edge: usize,
+    dev: DeviceState,
+    srv: ServerState,
+    rng: Rng,
+    /// Productive rounds completed since the last restart (the work a
+    /// SplitFed restart loses).
+    rounds_since_restart: u64,
+}
+
+impl Runner {
+    pub fn new(cfg: RunConfig, meta: ModelMeta) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Runner { cfg, meta })
+    }
+
+    pub fn cfg(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Execute the run.  `engine` is required in [`ExecMode::Real`].
+    pub fn run(&self, engine: Option<&Engine>) -> Result<RunReport> {
+        let cfg = &self.cfg;
+        let meta = &self.meta;
+        let real = cfg.exec == ExecMode::Real;
+        if real && engine.is_none() {
+            return Err(Error::Config("Real mode requires an engine".into()));
+        }
+        let split_engine = match engine {
+            Some(e) if real => Some(SplitEngine::new(e, meta.clone(), cfg.batch)?),
+            _ => None,
+        };
+        if let Some(se) = &split_engine {
+            se.warm_up(cfg.sp)?;
+        }
+
+        let mut root_rng = Rng::new(cfg.seed);
+        // Dedicated stream for failure injection so fault decisions do not
+        // perturb data/batch randomness.
+        let mut fault_rng = Rng::new(cfg.seed ^ 0xFA_17);
+        let train = SyntheticCifar::new(cfg.seed ^ 0x7EA1, cfg.train_samples);
+        let test = SyntheticCifar::new(cfg.seed ^ 0x7E57, cfg.test_samples);
+        let shards = partition(cfg.train_samples, &cfg.fractions, cfg.seed);
+
+        let mut global = GlobalModel::new(meta.init_params(cfg.seed));
+        let transport = InMemTransport::new();
+
+        let mut devices: Vec<DeviceCtx> = shards
+            .into_iter()
+            .enumerate()
+            .map(|(d, shard)| {
+                Ok(DeviceCtx {
+                    shard,
+                    edge: cfg.initial_edge[d],
+                    dev: DeviceState::from_global(meta, cfg.sp, &global.params)?,
+                    srv: ServerState::from_global(meta, cfg.sp, &global.params)?,
+                    rng: root_rng.fork(d as u64),
+                    rounds_since_restart: 0,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut report = RunReport {
+            strategy: cfg.strategy.name().to_string(),
+            sp: cfg.sp,
+            rounds: Vec::with_capacity(cfg.rounds as usize),
+            final_params: Vec::new(),
+        };
+
+        for round in 0..cfg.rounds {
+            // ---- mobility events at the round boundary (paper Step 6-9)
+            let moves: Vec<_> = cfg.schedule.at_round(round).copied().collect();
+            let mut moved = vec![false; devices.len()];
+            let mut mig_sim = vec![0.0f64; devices.len()];
+            let mut mig_host = vec![0.0f64; devices.len()];
+            let mut penalty = vec![0.0f64; devices.len()];
+            let mut failed = vec![false; devices.len()];
+            for e in moves {
+                let ctx = &mut devices[e.device];
+                if e.to_edge == ctx.edge {
+                    continue;
+                }
+                moved[e.device] = true;
+                // Failure injection: the checkpoint transfer may be lost
+                // or corrupted in transit (paper assumes a reliable link;
+                // we test the fallback path too).
+                let transfer_lost = cfg.strategy == Strategy::FedFly
+                    && cfg.fault_loss_prob > 0.0
+                    && fault_rng.next_f64() < cfg.fault_loss_prob;
+                let strategy = if transfer_lost {
+                    failed[e.device] = true;
+                    Strategy::Restart // destination never got the state
+                } else {
+                    cfg.strategy
+                };
+                match strategy {
+                    Strategy::FedFly => {
+                        // Checkpoint at the source edge, ship via the real
+                        // codec/transport, restore at the destination.
+                        let ck = Checkpoint {
+                            device_id: e.device as u64,
+                            sp: ctx.srv.sp as u32,
+                            round,
+                            epoch: 0,
+                            batch_idx: ctx.srv.batches_done,
+                            loss: ctx.srv.last_loss,
+                            server_params: std::mem::take(&mut ctx.srv.params),
+                            server_momentum: std::mem::take(&mut ctx.srv.momentum),
+                            grad_smashed: std::mem::take(&mut ctx.srv.last_grad_smashed),
+                            rng_state: ctx.rng.state(),
+                        };
+                        let bytes = ck.wire_bytes();
+                        let host = transport.send(e.to_edge, &ck)?;
+                        let restored = transport
+                            .receive(e.to_edge, e.device as u64)?
+                            .ok_or_else(|| Error::other("checkpoint lost in transit"))?;
+                        ctx.srv.params = restored.server_params;
+                        ctx.srv.momentum = restored.server_momentum;
+                        ctx.srv.last_grad_smashed = restored.grad_smashed;
+                        ctx.srv.last_loss = restored.loss;
+                        ctx.rng = Rng::from_state(restored.rng_state);
+                        mig_host[e.device] = host;
+                        mig_sim[e.device] = match cfg.route {
+                            MigrationRoute::EdgeToEdge => cfg.net.migration_time(bytes),
+                            MigrationRoute::ViaDevice => {
+                                cfg.net.migration_time_via_device(bytes)
+                            }
+                        };
+                    }
+                    Strategy::Restart => {
+                        // Destination edge has no state: server-side half
+                        // restarts from the current global model, optimizer
+                        // state is lost, and every productive round since
+                        // the last restart must be redone (paper §IV).
+                        ctx.srv =
+                            ServerState::restart_from_global(meta, cfg.sp, &global.params)?;
+                        ctx.dev.refresh_from_global(&global.params);
+                        ctx.dev.momentum.iter_mut().for_each(|m| *m = 0.0);
+                        let pair = PairTimeModel {
+                            device: cfg.device_profiles[e.device],
+                            edge: cfg.edge_profiles[e.to_edge],
+                            net: cfg.net,
+                        };
+                        let per_round =
+                            pair.round_time(meta, cfg.sp, cfg.batch, ctx.shard.len());
+                        penalty[e.device] = per_round * ctx.rounds_since_restart as f64;
+                        ctx.rounds_since_restart = 0;
+                    }
+                }
+                ctx.edge = e.to_edge;
+            }
+
+            // ---- local training (paper Steps 2/3), per device
+            let mut dev_rounds = Vec::with_capacity(devices.len());
+            let mut loss_sum = 0.0f64;
+            let mut loss_n = 0usize;
+            for (d, ctx) in devices.iter_mut().enumerate() {
+                let pair = PairTimeModel {
+                    device: cfg.device_profiles[d],
+                    edge: cfg.edge_profiles[ctx.edge],
+                    net: cfg.net,
+                };
+                let sim_seconds = pair.round_time(meta, cfg.sp, cfg.batch, ctx.shard.len());
+
+                let mut host_seconds = 0.0;
+                let mut loss_acc = 0.0f64;
+                let mut batches = 0usize;
+                if let Some(se) = &split_engine {
+                    let iter = BatchIter::new(&ctx.shard, cfg.batch, &mut ctx.rng);
+                    for idxs in iter {
+                        let (x, y) = train.batch(&idxs);
+                        let t0 = std::time::Instant::now();
+                        let out = se.train_batch(&mut ctx.dev, &mut ctx.srv, &x, &y)?;
+                        host_seconds += t0.elapsed().as_secs_f64();
+                        loss_acc += out.loss as f64;
+                        batches += 1;
+                    }
+                } else {
+                    // SimOnly: no data is touched, so skip the O(shard)
+                    // shuffle entirely (perf pass: see EXPERIMENTS.md §Perf
+                    // L3).  Batch *count* is all the clock model needs; the
+                    // RNG stream is per-device and unused elsewhere here.
+                    batches = ctx.shard.len() / cfg.batch;
+                }
+                ctx.rounds_since_restart += 1;
+                let loss = if batches > 0 && split_engine.is_some() {
+                    (loss_acc / batches as f64) as f32
+                } else {
+                    f32::NAN
+                };
+                if loss.is_finite() {
+                    loss_sum += loss as f64;
+                    loss_n += 1;
+                }
+                dev_rounds.push(DeviceRound {
+                    device: d,
+                    round,
+                    edge: ctx.edge,
+                    sim_seconds,
+                    host_seconds,
+                    loss,
+                    migrated: moved[d],
+                    migration_sim_seconds: mig_sim[d],
+                    migration_host_seconds: mig_host[d],
+                    restart_penalty_sim_seconds: penalty[d],
+                    migration_failed: failed[d],
+                });
+            }
+
+            // ---- aggregation (paper Steps 4/5)
+            if split_engine.is_some() {
+                let contributions: Vec<Contribution> = devices
+                    .iter()
+                    .enumerate()
+                    .map(|(d, ctx)| Contribution {
+                        device: d,
+                        params: concat_params(&ctx.dev, &ctx.srv),
+                        weight: ctx.shard.len().max(1) as f64,
+                    })
+                    .collect();
+                global.aggregate(&contributions)?;
+                for ctx in devices.iter_mut() {
+                    ctx.dev.refresh_from_global(&global.params);
+                    ctx.srv.refresh_from_global(&global.params);
+                }
+            }
+            // SimOnly: parameters never change (no compute), so FedAvg is
+            // a fixed point — skipping it is exact and saves ~2 ms x
+            // rounds x runs on figure generation (EXPERIMENTS.md §Perf L3).
+
+            // ---- evaluation (paper Step 6 -> next round; eval on demand)
+            let accuracy = match (&split_engine, cfg.eval_every) {
+                (Some(se), Some(every))
+                    if every > 0 && (round % every == every - 1 || round + 1 == cfg.rounds) =>
+                {
+                    Some(evaluate(se, &global.params, &test, cfg.batch)?)
+                }
+                _ => None,
+            };
+
+            report.rounds.push(RoundRecord {
+                round,
+                mean_loss: if loss_n > 0 {
+                    (loss_sum / loss_n as f64) as f32
+                } else {
+                    f32::NAN
+                },
+                accuracy,
+                devices: dev_rounds,
+            });
+        }
+        report.final_params = global.params;
+        Ok(report)
+    }
+}
+
+/// Evaluate top-1 accuracy of `params` on the synthetic test set.
+pub fn evaluate(
+    se: &SplitEngine<'_>,
+    params: &[f32],
+    test: &SyntheticCifar,
+    batch: usize,
+) -> Result<f64> {
+    let n = (test.len() / batch) * batch;
+    if n == 0 {
+        return Err(Error::Config("test set smaller than one batch".into()));
+    }
+    let classes = se.meta().manifest.num_classes;
+    let mut correct_weighted = 0.0f64;
+    let mut total = 0usize;
+    for start in (0..n).step_by(batch) {
+        let idxs: Vec<usize> = (start..start + batch).collect();
+        let (x, y) = test.batch(&idxs);
+        let logits = se.eval_logits(params, &x)?;
+        correct_weighted += accuracy_from_logits(&logits, &y, classes) * batch as f64;
+        total += batch;
+    }
+    Ok(correct_weighted / total as f64)
+}

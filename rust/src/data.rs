@@ -1,0 +1,329 @@
+//! Synthetic CIFAR-10-like dataset + federated sharding.
+//!
+//! No dataset download is possible offline, so we generate a deterministic
+//! class-conditional image distribution with the exact CIFAR-10 tensor
+//! geometry (3@32x32, 10 classes, 50k/10k splits at paper scale).  Each
+//! class has a structured template (orientation-varying sinusoid gratings
+//! in class-specific color channels) plus per-sample Gaussian noise and a
+//! random phase, so the classification task is learnable but not trivial —
+//! losses fall and accuracy rises well above chance within a few rounds,
+//! which is what the paper's accuracy-preservation claim (Fig 4) needs
+//! exercised.  Images are generated on the fly from `(seed, index)` so a
+//! paper-scale virtual dataset costs no memory.
+
+use crate::util::Rng;
+
+/// CIFAR geometry.
+pub const IMG_H: usize = 32;
+pub const IMG_W: usize = 32;
+pub const IMG_C: usize = 3;
+pub const IMG_ELEMS: usize = IMG_H * IMG_W * IMG_C;
+pub const NUM_CLASSES: usize = 10;
+
+/// A deterministic synthetic dataset: `len` samples, labels uniform over
+/// the 10 classes (exactly balanced across classes in index order).
+#[derive(Clone, Debug)]
+pub struct SyntheticCifar {
+    seed: u64,
+    len: usize,
+    noise: f32,
+}
+
+impl SyntheticCifar {
+    pub fn new(seed: u64, len: usize) -> Self {
+        SyntheticCifar {
+            seed,
+            len,
+            noise: 0.35,
+        }
+    }
+
+    pub fn with_noise(mut self, noise: f32) -> Self {
+        self.noise = noise;
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Label of sample `idx` (round-robin over classes => exactly balanced).
+    pub fn label(&self, idx: usize) -> u32 {
+        (idx % NUM_CLASSES) as u32
+    }
+
+    /// Write sample `idx` as NHWC f32 into `out` (len IMG_ELEMS).
+    pub fn fill_image(&self, idx: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), IMG_ELEMS);
+        let class = self.label(idx) as usize;
+        let mut rng = Rng::new(self.seed ^ (idx as u64).wrapping_mul(0xA24BAED4963EE407));
+        // Class template: a sinusoid grating with class-specific
+        // orientation & frequency, in a class-specific channel mix.
+        let angle = class as f64 * std::f64::consts::PI / NUM_CLASSES as f64;
+        let freq = 2.0 + (class % 5) as f64;
+        let (sin_a, cos_a) = angle.sin_cos();
+        let phase = rng.next_f64() * std::f64::consts::TAU;
+        let chan_mix = [
+            0.4 + 0.6 * ((class * 7 + 1) % 10) as f64 / 10.0,
+            0.4 + 0.6 * ((class * 3 + 4) % 10) as f64 / 10.0,
+            0.4 + 0.6 * ((class * 9 + 7) % 10) as f64 / 10.0,
+        ];
+        for i in 0..IMG_H {
+            for j in 0..IMG_W {
+                let u = i as f64 / IMG_H as f64 - 0.5;
+                let v = j as f64 / IMG_W as f64 - 0.5;
+                let t = (u * cos_a + v * sin_a) * freq * std::f64::consts::TAU + phase;
+                let base = t.sin();
+                for c in 0..IMG_C {
+                    let noise = rng.gaussian() * self.noise as f64;
+                    out[(i * IMG_W + j) * IMG_C + c] = (base * chan_mix[c] + noise) as f32;
+                }
+            }
+        }
+    }
+
+    /// Materialize a batch of images+labels by sample indices.
+    pub fn batch(&self, indices: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let mut x = vec![0.0f32; indices.len() * IMG_ELEMS];
+        let mut y = Vec::with_capacity(indices.len());
+        for (k, &idx) in indices.iter().enumerate() {
+            self.fill_image(idx, &mut x[k * IMG_ELEMS..(k + 1) * IMG_ELEMS]);
+            y.push(self.label(idx) as i32);
+        }
+        (x, y)
+    }
+}
+
+/// A device's shard: a set of sample indices into the global dataset.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Shard {
+    pub device: usize,
+    pub indices: Vec<usize>,
+}
+
+impl Shard {
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+}
+
+/// Partition `total` samples across devices.
+///
+/// `fractions[i]` is device i's share of the dataset; they must sum to
+/// <= 1.0 (+epsilon).  The paper's experiments use balanced (0.25 each for
+/// 4 devices) and imbalanced (e.g. mobile device 0.5, rest equal) splits.
+pub fn partition(total: usize, fractions: &[f64], seed: u64) -> Vec<Shard> {
+    let sum: f64 = fractions.iter().sum();
+    assert!(
+        sum <= 1.0 + 1e-9,
+        "shard fractions sum to {sum} > 1.0"
+    );
+    let mut order: Vec<usize> = (0..total).collect();
+    let mut rng = Rng::new(seed ^ 0x5AAD);
+    rng.shuffle(&mut order);
+    let mut shards = Vec::with_capacity(fractions.len());
+    let mut cursor = 0usize;
+    for (device, &f) in fractions.iter().enumerate() {
+        let n = (total as f64 * f).round() as usize;
+        let n = n.min(total - cursor);
+        shards.push(Shard {
+            device,
+            indices: order[cursor..cursor + n].to_vec(),
+        });
+        cursor += n;
+    }
+    shards
+}
+
+/// Balanced fractions for `n` devices.
+pub fn balanced_fractions(n: usize) -> Vec<f64> {
+    vec![1.0 / n as f64; n]
+}
+
+/// Imbalanced fractions: `mobile_frac` on device `mobile`, rest equal.
+pub fn imbalanced_fractions(n: usize, mobile: usize, mobile_frac: f64) -> Vec<f64> {
+    assert!(mobile < n && mobile_frac < 1.0);
+    let rest = (1.0 - mobile_frac) / (n - 1) as f64;
+    (0..n)
+        .map(|i| if i == mobile { mobile_frac } else { rest })
+        .collect()
+}
+
+/// Deterministic epoch iterator: shuffles the shard with the device RNG and
+/// yields full batches (trailing partial batch dropped, as in the paper's
+/// fixed batch-size setup).
+pub struct BatchIter<'a> {
+    order: Vec<usize>,
+    batch: usize,
+    cursor: usize,
+    shard: &'a Shard,
+}
+
+impl<'a> BatchIter<'a> {
+    pub fn new(shard: &'a Shard, batch: usize, rng: &mut Rng) -> Self {
+        let mut order = shard.indices.clone();
+        rng.shuffle(&mut order);
+        BatchIter {
+            order,
+            batch,
+            cursor: 0,
+            shard,
+        }
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.order.len() / self.batch
+    }
+}
+
+impl<'a> Iterator for BatchIter<'a> {
+    type Item = Vec<usize>;
+
+    fn next(&mut self) -> Option<Vec<usize>> {
+        if self.cursor + self.batch > self.order.len() {
+            return None;
+        }
+        let b = self.order[self.cursor..self.cursor + self.batch].to_vec();
+        self.cursor += self.batch;
+        let _ = self.shard;
+        Some(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn images_are_deterministic() {
+        let ds = SyntheticCifar::new(7, 100);
+        let mut a = vec![0.0; IMG_ELEMS];
+        let mut b = vec![0.0; IMG_ELEMS];
+        ds.fill_image(42, &mut a);
+        ds.fill_image(42, &mut b);
+        assert_eq!(a, b);
+        ds.fill_image(43, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let ds = SyntheticCifar::new(0, 1000);
+        let mut counts = [0usize; NUM_CLASSES];
+        for i in 0..1000 {
+            counts[ds.label(i) as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 100));
+    }
+
+    #[test]
+    fn same_class_images_correlate_more_than_cross_class() {
+        // The template must carry class signal above the noise floor.
+        let ds = SyntheticCifar::new(3, 1000);
+        let img = |i: usize| {
+            let mut v = vec![0.0f32; IMG_ELEMS];
+            ds.fill_image(i, &mut v);
+            v
+        };
+        let corr = |a: &[f32], b: &[f32]| {
+            let dot: f64 = a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum();
+            let na: f64 = a.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+            let nb: f64 = b.iter().map(|x| (*x as f64).powi(2)).sum::<f64>().sqrt();
+            (dot / (na * nb)).abs()
+        };
+        // samples 0,10,20 are class 0; 1 is class 1
+        let (a, b, c) = (img(0), img(10), img(1));
+        assert!(corr(&a, &b) > corr(&a, &c), "same {} cross {}", corr(&a, &b), corr(&a, &c));
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let ds = SyntheticCifar::new(1, 50);
+        let (x, y) = ds.batch(&[0, 1, 2, 3]);
+        assert_eq!(x.len(), 4 * IMG_ELEMS);
+        assert_eq!(y, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn partition_balanced() {
+        let shards = partition(1000, &balanced_fractions(4), 0);
+        assert_eq!(shards.len(), 4);
+        assert!(shards.iter().all(|s| s.len() == 250));
+        // disjoint
+        let mut all: Vec<usize> = shards.iter().flat_map(|s| s.indices.clone()).collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 1000);
+    }
+
+    #[test]
+    fn partition_imbalanced() {
+        let f = imbalanced_fractions(4, 2, 0.5);
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        let shards = partition(1200, &f, 1);
+        assert_eq!(shards[2].len(), 600);
+        assert_eq!(shards[0].len(), 200);
+    }
+
+    #[test]
+    fn prop_partition_disjoint_and_sized() {
+        use crate::util::prop::forall;
+        forall(50, |r| {
+            let n = 2 + r.below(6);
+            let total = 100 + r.below(2000);
+            let mobile = r.below(n);
+            let f = imbalanced_fractions(n, mobile, 0.2 + r.next_f64() * 0.6);
+            let shards = partition(total, &f, r.next_u64());
+            let mut seen = std::collections::HashSet::new();
+            for s in &shards {
+                for &i in &s.indices {
+                    assert!(i < total);
+                    assert!(seen.insert(i), "index {i} assigned twice");
+                }
+            }
+            let assigned: usize = shards.iter().map(|s| s.len()).sum();
+            assert!(assigned <= total);
+            assert!(assigned >= total - shards.len()); // rounding loses < 1/shard
+        });
+    }
+
+    #[test]
+    fn batch_iter_is_shuffled_and_exact() {
+        let shard = Shard {
+            device: 0,
+            indices: (0..103).collect(),
+        };
+        let mut rng = Rng::new(5);
+        let it = BatchIter::new(&shard, 10, &mut rng);
+        assert_eq!(it.num_batches(), 10);
+        let batches: Vec<Vec<usize>> = it.collect();
+        assert_eq!(batches.len(), 10);
+        let flat: Vec<usize> = batches.concat();
+        assert_eq!(flat.len(), 100); // trailing 3 dropped
+        let uniq: std::collections::HashSet<_> = flat.iter().collect();
+        assert_eq!(uniq.len(), 100);
+        assert_ne!(flat, (0..100).collect::<Vec<_>>()); // shuffled
+    }
+
+    #[test]
+    fn batch_iter_replays_identically_from_same_rng_state() {
+        // The bit-exact-resume invariant depends on this.
+        let shard = Shard {
+            device: 1,
+            indices: (0..64).collect(),
+        };
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::from_state(r1.state());
+        let b1: Vec<_> = BatchIter::new(&shard, 8, &mut r1).collect();
+        let b2: Vec<_> = BatchIter::new(&shard, 8, &mut r2).collect();
+        assert_eq!(b1, b2);
+    }
+}

@@ -1,0 +1,49 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the FedFly coordinator.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("xla/pjrt error: {0}")]
+    Xla(#[from] xla::Error),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json parse error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    #[error("shape mismatch: expected {expected:?}, got {got:?} ({context})")]
+    Shape {
+        expected: Vec<usize>,
+        got: Vec<usize>,
+        context: String,
+    },
+
+    #[error("checkpoint codec error: {0}")]
+    Codec(String),
+
+    #[error("protocol error: {0}")]
+    Proto(String),
+
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("topology error: {0}")]
+    Topology(String),
+
+    #[error("{0}")]
+    Other(String),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    pub fn other(msg: impl Into<String>) -> Self {
+        Error::Other(msg.into())
+    }
+}

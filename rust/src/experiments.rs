@@ -1,0 +1,505 @@
+//! The paper's evaluation, experiment by experiment (DESIGN.md's index).
+//!
+//! * [`fig3`] family — "device training time per round" under mobility
+//!   (Fig 3a: 25% data; Fig 3b: 50% data; Fig 3c: split-point sweep),
+//!   FedFly vs SplitFed-restart, simulated-testbed clock at paper scale.
+//! * [`fig4`] — global accuracy under frequent moves (20% / 50% data on
+//!   the mobile device), *really trained* through the AOT artifacts at a
+//!   scaled-down size.
+//! * [`overhead`] — the "up to two seconds" migration-overhead table:
+//!   measured (real sockets, localhost) and simulated (75 Mbps testbed).
+
+use std::sync::Arc;
+
+use crate::config::{ExecMode, RunConfig};
+use crate::coordinator::Runner;
+use crate::data::imbalanced_fractions;
+use crate::error::Result;
+use crate::manifest::Manifest;
+use crate::metrics::RunReport;
+use crate::migration::{
+    codec::Checkpoint, transport::send_checkpoint_tcp, transport::TcpCheckpointServer, Strategy,
+};
+use crate::mobility::Schedule;
+use crate::model::ModelMeta;
+use crate::runtime::Engine;
+
+/// Paper device names, in testbed order.
+pub const DEVICE_NAMES: [&str; 4] = ["Pi3_1", "Pi3_2", "Pi4_1", "Pi4_2"];
+
+/// Analytic savings of FedFly over restart when moving at fraction `f` of
+/// training: the restart redoes `f*R` of `R` rounds -> `f/(1+f)`.
+pub fn analytic_savings(f: f64) -> f64 {
+    f / (1.0 + f)
+}
+
+/// One row of a Fig-3 style table.
+#[derive(Clone, Debug)]
+pub struct Fig3Row {
+    pub device: usize,
+    pub device_name: &'static str,
+    /// Training-progress fraction at which the device moved (0.5 / 0.9).
+    pub stage: f64,
+    pub sp: usize,
+    /// Avg device training time per round (simulated testbed seconds).
+    pub splitfed_s: f64,
+    pub fedfly_s: f64,
+    /// FedFly's migration overhead amortized into `fedfly_s` (total s).
+    pub migration_overhead_s: f64,
+    /// 1 - fedfly/splitfed.
+    pub savings: f64,
+}
+
+fn base_cfg(meta: &ModelMeta) -> RunConfig {
+    let _ = meta;
+    RunConfig::paper_testbed()
+}
+
+/// Run one mobility experiment in simulate-only mode and summarize the
+/// moving device.
+fn run_mobility_case(
+    meta: &ModelMeta,
+    mut cfg: RunConfig,
+    device: usize,
+    stage: f64,
+    strategy: Strategy,
+) -> Result<(f64, f64)> {
+    // Move away from the device's initial edge.
+    let dest = (cfg.initial_edge[device] + 1) % cfg.n_edges();
+    cfg.schedule = Schedule::at_fraction(device, stage, cfg.rounds, dest);
+    cfg.strategy = strategy;
+    cfg.exec = ExecMode::SimOnly;
+    let report = Runner::new(cfg, meta.clone())?.run(None)?;
+    let s = report.device_summary(device);
+    Ok((s.effective_time_per_round, s.total_migration_sim))
+}
+
+/// Fig 3a/3b core: per device, per stage (50%/90%), FedFly vs SplitFed.
+///
+/// `mobile_frac`: the share of the dataset on the moving device (0.25 for
+/// Fig 3a — balanced; 0.5 for Fig 3b — imbalanced).
+pub fn fig3(meta: &ModelMeta, mobile_frac: f64, sp: usize) -> Result<Vec<Fig3Row>> {
+    let mut rows = Vec::new();
+    for device in 0..4 {
+        for &stage in &[0.5, 0.9] {
+            let mut cfg = base_cfg(meta);
+            cfg.sp = sp;
+            cfg.fractions = if (mobile_frac - 0.25).abs() < 1e-9 {
+                vec![0.25; 4]
+            } else {
+                imbalanced_fractions(4, device, mobile_frac)
+            };
+            let (splitfed_s, _) =
+                run_mobility_case(meta, cfg.clone(), device, stage, Strategy::Restart)?;
+            let (fedfly_s, mig) =
+                run_mobility_case(meta, cfg, device, stage, Strategy::FedFly)?;
+            rows.push(Fig3Row {
+                device,
+                device_name: DEVICE_NAMES[device],
+                stage,
+                sp,
+                splitfed_s,
+                fedfly_s,
+                migration_overhead_s: mig,
+                savings: 1.0 - fedfly_s / splitfed_s,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Fig 3a: 25% of the dataset on the mobile device, SP2.
+pub fn fig3a(meta: &ModelMeta) -> Result<Vec<Fig3Row>> {
+    fig3(meta, 0.25, 2)
+}
+
+/// Fig 3b: 50% of the dataset on the mobile device, SP2.
+pub fn fig3b(meta: &ModelMeta) -> Result<Vec<Fig3Row>> {
+    fig3(meta, 0.5, 2)
+}
+
+/// Fig 3c: split-point sweep SP1..SP3 — Pi3_1, 25% data, move at 90%.
+pub fn fig3c(meta: &ModelMeta) -> Result<Vec<Fig3Row>> {
+    let mut rows = Vec::new();
+    for sp in 1..=3 {
+        let mut cfg = base_cfg(meta);
+        cfg.sp = sp;
+        cfg.fractions = vec![0.25; 4];
+        let device = 0;
+        let (splitfed_s, _) =
+            run_mobility_case(meta, cfg.clone(), device, 0.9, Strategy::Restart)?;
+        let (fedfly_s, mig) = run_mobility_case(meta, cfg, device, 0.9, Strategy::FedFly)?;
+        rows.push(Fig3Row {
+            device,
+            device_name: DEVICE_NAMES[device],
+            stage: 0.9,
+            sp,
+            splitfed_s,
+            fedfly_s,
+            migration_overhead_s: mig,
+            savings: 1.0 - fedfly_s / splitfed_s,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render a Fig-3 table like the paper's bar charts.
+pub fn render_fig3(rows: &[Fig3Row], title: &str) -> String {
+    let mut out = format!("{title}\n");
+    out.push_str(
+        "device   stage  sp  splitfed(s/rnd)  fedfly(s/rnd)  overhead(s)  savings  paper\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:<8} {:>4.0}%  {}   {:>14.1}  {:>13.1}  {:>11.3}  {:>6.1}%  {:>5.1}%\n",
+            r.device_name,
+            r.stage * 100.0,
+            r.sp,
+            r.splitfed_s,
+            r.fedfly_s,
+            r.migration_overhead_s,
+            r.savings * 100.0,
+            analytic_savings(r.stage) * 100.0,
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Fig 4: accuracy under frequent mobility (real training, scaled)
+
+/// Scaled-down Fig-4 configuration knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct Fig4Scale {
+    pub rounds: u64,
+    pub train_samples: usize,
+    pub test_samples: usize,
+    pub batch: usize,
+    pub move_period: u64,
+    pub eval_every: u64,
+}
+
+impl Default for Fig4Scale {
+    /// Paper: 100 rounds, 50k samples, batch 100, moves every 10 rounds.
+    /// Default scale: 20 rounds, 1280 samples, batch 16, moves every 2 —
+    /// same move-to-round ratio (10%).
+    fn default() -> Self {
+        Fig4Scale {
+            rounds: 20,
+            train_samples: 1280,
+            test_samples: 320,
+            batch: 16,
+            move_period: 2,
+            eval_every: 2,
+        }
+    }
+}
+
+/// Fig 4 result: accuracy curves for both strategies.
+#[derive(Clone, Debug)]
+pub struct Fig4Result {
+    pub mobile_frac: f64,
+    pub fedfly: RunReport,
+    pub splitfed: RunReport,
+}
+
+/// Run the Fig-4 experiment: the mobile device (device 0, holding
+/// `mobile_frac` of the data) ping-pongs between the two edges every
+/// `scale.move_period` rounds; both strategies train for the same rounds
+/// and we compare accuracy curves.
+pub fn fig4(
+    engine: &Engine,
+    meta: &ModelMeta,
+    mobile_frac: f64,
+    scale: Fig4Scale,
+) -> Result<Fig4Result> {
+    let mut cfg = RunConfig::paper_testbed();
+    cfg.rounds = scale.rounds;
+    cfg.batch = scale.batch;
+    cfg.train_samples = scale.train_samples;
+    cfg.test_samples = scale.test_samples;
+    cfg.exec = ExecMode::Real;
+    cfg.eval_every = Some(scale.eval_every);
+    cfg.fractions = imbalanced_fractions(4, 0, mobile_frac);
+    cfg.schedule = Schedule::periodic(0, scale.move_period, scale.rounds, (0, 1));
+
+    let mut fed = cfg.clone();
+    fed.strategy = Strategy::FedFly;
+    let fedfly = Runner::new(fed, meta.clone())?.run(Some(engine))?;
+
+    let mut spl = cfg;
+    spl.strategy = Strategy::Restart;
+    let splitfed = Runner::new(spl, meta.clone())?.run(Some(engine))?;
+
+    Ok(Fig4Result {
+        mobile_frac,
+        fedfly,
+        splitfed,
+    })
+}
+
+/// Render Fig-4 curves side by side.
+pub fn render_fig4(res: &Fig4Result) -> String {
+    let mut out = format!(
+        "Fig 4 — global accuracy, mobile device holds {:.0}% of data\n\
+         round  fedfly_acc  splitfed_acc  fedfly_loss  splitfed_loss\n",
+        res.mobile_frac * 100.0
+    );
+    let fa: std::collections::BTreeMap<u64, f64> = res.fedfly.accuracy_curve().into_iter().collect();
+    let sa: std::collections::BTreeMap<u64, f64> =
+        res.splitfed.accuracy_curve().into_iter().collect();
+    let fl: std::collections::BTreeMap<u64, f32> = res.fedfly.loss_curve().into_iter().collect();
+    let sl: std::collections::BTreeMap<u64, f32> = res.splitfed.loss_curve().into_iter().collect();
+    for round in fa.keys() {
+        out.push_str(&format!(
+            "{:>5}  {:>10.4}  {:>12.4}  {:>11.4}  {:>13.4}\n",
+            round,
+            fa[round],
+            sa.get(round).copied().unwrap_or(f64::NAN),
+            fl.get(round).copied().unwrap_or(f32::NAN),
+            sl.get(round).copied().unwrap_or(f32::NAN),
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Multi-device simultaneous mobility (paper §VI future work #1)
+
+/// One row of the multi-mobility table: `n_moving` devices all move at
+/// the same round (50% of training).
+#[derive(Clone, Debug)]
+pub struct MultiMobilityRow {
+    pub n_moving: usize,
+    /// Sum over all devices of effective time/round (simulated s).
+    pub fedfly_total_s: f64,
+    pub splitfed_total_s: f64,
+    pub savings: f64,
+}
+
+/// Paper §VI: "further challenges may occur if multiple devices try to
+/// move at the same time".  Sweep 1..=4 devices moving simultaneously at
+/// 50% of training and compare aggregate device time under both
+/// strategies (simulated paper scale).
+pub fn multi_mobility(meta: &ModelMeta) -> Result<Vec<MultiMobilityRow>> {
+    let mut rows = Vec::new();
+    for n_moving in 1..=4 {
+        let mut totals = [0.0f64; 2];
+        for (i, strat) in [Strategy::Restart, Strategy::FedFly].iter().enumerate() {
+            let mut cfg = RunConfig::paper_testbed();
+            cfg.exec = ExecMode::SimOnly;
+            cfg.strategy = *strat;
+            let round = cfg.rounds / 2;
+            cfg.schedule = Schedule::new(
+                (0..n_moving)
+                    .map(|d| crate::mobility::MoveEvent {
+                        round,
+                        device: d,
+                        to_edge: (cfg.initial_edge[d] + 1) % cfg.n_edges(),
+                    })
+                    .collect(),
+            );
+            let report = Runner::new(cfg, meta.clone())?.run(None)?;
+            totals[i] = report
+                .summaries()
+                .iter()
+                .map(|s| s.effective_time_per_round)
+                .sum();
+        }
+        rows.push(MultiMobilityRow {
+            n_moving,
+            fedfly_total_s: totals[1],
+            splitfed_total_s: totals[0],
+            savings: 1.0 - totals[1] / totals[0],
+        });
+    }
+    Ok(rows)
+}
+
+/// Render the multi-mobility table.
+pub fn render_multi_mobility(rows: &[MultiMobilityRow]) -> String {
+    let mut out = String::from(
+        "Simultaneous device mobility (all move at 50% of training)\n\
+         #moving  splitfed Σ(s/rnd)  fedfly Σ(s/rnd)  fleet savings\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{:>7}  {:>17.1}  {:>15.1}  {:>12.1}%\n",
+            r.n_moving,
+            r.splitfed_total_s,
+            r.fedfly_total_s,
+            r.savings * 100.0
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Migration overhead (paper §V-B: "up to two seconds")
+
+/// One row of the overhead table.
+#[derive(Clone, Debug)]
+pub struct OverheadRow {
+    pub sp: usize,
+    pub checkpoint_bytes: usize,
+    /// Encode+TCP+decode on localhost, measured.
+    pub measured_s: f64,
+    /// 75 Mbps edge-to-edge testbed link, simulated.
+    pub simulated_s: f64,
+    /// Device-relayed route, simulated.
+    pub simulated_via_device_s: f64,
+}
+
+/// Measure checkpoint migration overhead for every split point.
+pub fn overhead(meta: &ModelMeta, batch: usize) -> Result<Vec<OverheadRow>> {
+    let net = crate::netsim::NetModel::default();
+    let mut rows = Vec::new();
+    for sp in 1..=3 {
+        let ns = meta.server_params(sp)?;
+        let smashed = meta.manifest.smashed_elems(sp, batch)?;
+        let ck = Checkpoint {
+            device_id: 0,
+            sp: sp as u32,
+            round: 50,
+            epoch: 0,
+            batch_idx: 17,
+            loss: 1.0,
+            server_params: vec![0.1; ns],
+            server_momentum: vec![0.01; ns],
+            grad_smashed: vec![0.0; smashed],
+            rng_state: [1, 2, 3, 4],
+        };
+        let server = TcpCheckpointServer::start(1)?;
+        let (measured_s, bytes) = send_checkpoint_tcp(server.addr(), &ck)?;
+        server.join()?;
+        rows.push(OverheadRow {
+            sp,
+            checkpoint_bytes: bytes,
+            measured_s,
+            simulated_s: net.migration_time(bytes),
+            simulated_via_device_s: net.migration_time_via_device(bytes),
+        });
+    }
+    Ok(rows)
+}
+
+/// Render the overhead table.
+pub fn render_overhead(rows: &[OverheadRow]) -> String {
+    let mut out = String::from(
+        "Migration overhead (paper: \"up to two seconds\")\n\
+         sp  checkpoint(MB)  measured-localhost(s)  simulated-75Mbps(s)  via-device(s)\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "{}   {:>13.2}  {:>20.4}  {:>18.3}  {:>12.3}\n",
+            r.sp,
+            r.checkpoint_bytes as f64 / 1e6,
+            r.measured_s,
+            r.simulated_s,
+            r.simulated_via_device_s,
+        ));
+    }
+    out
+}
+
+/// Load manifest + meta with a readable error.
+pub fn load_meta() -> Result<ModelMeta> {
+    Ok(ModelMeta::new(Arc::new(Manifest::load_default()?)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn analytic_savings_matches_paper_claims() {
+        // Paper: up to 33% at 50% training, ~45% at 90%.
+        assert!((analytic_savings(0.5) - 1.0 / 3.0).abs() < 1e-9);
+        assert!((analytic_savings(0.9) - 0.9 / 1.9).abs() < 1e-9);
+        assert!(analytic_savings(0.9) > 0.45);
+    }
+
+    #[test]
+    fn fig3a_shape_matches_paper() {
+        let Ok(meta) = load_meta() else { return };
+        let rows = fig3a(&meta).unwrap();
+        assert_eq!(rows.len(), 8); // 4 devices x 2 stages
+        for r in &rows {
+            // FedFly always wins (paper: "FedFly always outperforms SplitFed")
+            assert!(r.fedfly_s < r.splitfed_s, "{r:?}");
+            // savings land near the analytic value (migration overhead
+            // makes them slightly smaller)
+            let expect = analytic_savings(r.stage);
+            assert!(
+                (r.savings - expect).abs() < 0.03,
+                "savings {} vs analytic {expect} ({r:?})",
+                r.savings
+            );
+        }
+        // 50%-stage rows ~33%, 90%-stage rows ~45%+
+        let s50: Vec<_> = rows.iter().filter(|r| r.stage == 0.5).collect();
+        let s90: Vec<_> = rows.iter().filter(|r| r.stage == 0.9).collect();
+        assert!(s50.iter().all(|r| r.savings > 0.30 && r.savings < 0.34));
+        assert!(s90.iter().all(|r| r.savings > 0.44 && r.savings < 0.48));
+    }
+
+    #[test]
+    fn fig3b_times_exceed_fig3a() {
+        // Paper: "training time on devices is longer than in Fig 3a".
+        let Ok(meta) = load_meta() else { return };
+        let a = fig3a(&meta).unwrap();
+        let b = fig3b(&meta).unwrap();
+        for (ra, rb) in a.iter().zip(&b) {
+            assert!(rb.fedfly_s > ra.fedfly_s, "{} !> {}", rb.fedfly_s, ra.fedfly_s);
+        }
+    }
+
+    #[test]
+    fn fig3c_deeper_split_is_slower() {
+        let Ok(meta) = load_meta() else { return };
+        let rows = fig3c(&meta).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert!(rows[0].fedfly_s < rows[1].fedfly_s);
+        assert!(rows[1].fedfly_s < rows[2].fedfly_s);
+        // FedFly wins at every split point
+        assert!(rows.iter().all(|r| r.savings > 0.4));
+    }
+
+    #[test]
+    fn multi_mobility_savings_grow_with_fleet() {
+        let Ok(meta) = load_meta() else { return };
+        let rows = multi_mobility(&meta).unwrap();
+        assert_eq!(rows.len(), 4);
+        for w in rows.windows(2) {
+            // more simultaneous movers -> larger fleet-level savings
+            assert!(w[1].savings > w[0].savings, "{rows:?}");
+        }
+        assert!(rows[0].savings > 0.0);
+    }
+
+    #[test]
+    fn overhead_under_two_seconds_simulated() {
+        let Ok(meta) = load_meta() else { return };
+        let rows = overhead(&meta, 100).unwrap();
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(
+                r.simulated_s < 2.0,
+                "sp{} simulated overhead {} >= 2s",
+                r.sp,
+                r.simulated_s
+            );
+            assert!(r.measured_s < 2.0);
+            assert!(r.simulated_via_device_s > r.simulated_s);
+        }
+    }
+
+    #[test]
+    fn render_functions_produce_tables() {
+        let Ok(meta) = load_meta() else { return };
+        let rows = fig3c(&meta).unwrap();
+        let t = render_fig3(&rows, "Fig 3c");
+        assert!(t.contains("Fig 3c"));
+        assert!(t.lines().count() >= 5);
+    }
+}

@@ -1,0 +1,103 @@
+//! Federated averaging (FedAvg, McMahan et al. 2017) over flat parameter
+//! vectors — the central server's Step 5 in the FedFly protocol.
+
+use crate::error::{Error, Result};
+use crate::tensor::weighted_average;
+
+/// One device's contribution to a round: its full flat parameter vector
+/// (device half ++ server half) and its aggregation weight (sample count).
+#[derive(Clone, Debug)]
+pub struct Contribution {
+    pub device: usize,
+    pub params: Vec<f32>,
+    pub weight: f64,
+}
+
+/// The central server's global model.
+#[derive(Clone, Debug)]
+pub struct GlobalModel {
+    pub params: Vec<f32>,
+    pub round: u64,
+}
+
+impl GlobalModel {
+    pub fn new(params: Vec<f32>) -> Self {
+        GlobalModel { params, round: 0 }
+    }
+
+    /// FedAvg step: replace the global parameters with the sample-weighted
+    /// average of the contributions and advance the round counter.
+    pub fn aggregate(&mut self, contributions: &[Contribution]) -> Result<()> {
+        if contributions.is_empty() {
+            return Err(Error::other("aggregate: no contributions"));
+        }
+        for c in contributions {
+            if c.params.len() != self.params.len() {
+                return Err(Error::Shape {
+                    expected: vec![self.params.len()],
+                    got: vec![c.params.len()],
+                    context: format!("contribution from device {}", c.device),
+                });
+            }
+        }
+        let vecs: Vec<&[f32]> = contributions.iter().map(|c| c.params.as_slice()).collect();
+        let weights: Vec<f64> = contributions.iter().map(|c| c.weight).collect();
+        self.params = weighted_average(&vecs, &weights)?;
+        self.round += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn contrib(device: usize, v: f32, n: usize, w: f64) -> Contribution {
+        Contribution {
+            device,
+            params: vec![v; n],
+            weight: w,
+        }
+    }
+
+    #[test]
+    fn aggregate_weighted_mean() {
+        let mut g = GlobalModel::new(vec![0.0; 4]);
+        g.aggregate(&[contrib(0, 1.0, 4, 1.0), contrib(1, 3.0, 4, 3.0)])
+            .unwrap();
+        assert!(g.params.iter().all(|&x| (x - 2.5).abs() < 1e-6));
+        assert_eq!(g.round, 1);
+    }
+
+    #[test]
+    fn aggregate_rejects_mismatched_shapes() {
+        let mut g = GlobalModel::new(vec![0.0; 4]);
+        let err = g
+            .aggregate(&[contrib(0, 1.0, 3, 1.0)])
+            .unwrap_err();
+        assert!(matches!(err, Error::Shape { .. }));
+    }
+
+    #[test]
+    fn aggregate_rejects_empty() {
+        let mut g = GlobalModel::new(vec![0.0; 4]);
+        assert!(g.aggregate(&[]).is_err());
+    }
+
+    #[test]
+    fn identical_contributions_are_fixed_point() {
+        let mut g = GlobalModel::new(vec![7.0; 16]);
+        let c: Vec<Contribution> = (0..4).map(|d| contrib(d, 7.0, 16, 1.0 + d as f64)).collect();
+        g.aggregate(&c).unwrap();
+        assert!(g.params.iter().all(|&x| (x - 7.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn round_counter_advances() {
+        let mut g = GlobalModel::new(vec![0.0; 2]);
+        for r in 1..=5 {
+            g.aggregate(&[contrib(0, r as f32, 2, 1.0)]).unwrap();
+            assert_eq!(g.round, r);
+        }
+    }
+}

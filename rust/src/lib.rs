@@ -1,0 +1,47 @@
+//! # FedFly — migration in edge-based distributed federated learning
+//!
+//! A reproduction of *FedFly: Towards Migration in Edge-based Distributed
+//! Federated Learning* (Ullah et al., 2021) as a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * **Layer 1/2 (build time)** — the VGG-5 split model and its Pallas
+//!   kernels live under `python/compile/` and are AOT-lowered by
+//!   `make artifacts` into `artifacts/*.hlo.txt`.
+//! * **Layer 3 (this crate)** — the hierarchical cloud–edge–device FL
+//!   coordinator: split-learning round loop, FedAvg aggregation, device
+//!   mobility, and the paper's contribution — **checkpoint migration of the
+//!   edge-side training state when a device moves between edge servers**.
+//!
+//! Python never runs on the request path: the [`runtime::Engine`] loads the
+//! HLO artifacts once via PJRT and every training phase is a single
+//! ahead-of-time-compiled executable call.
+//!
+//! Entry points:
+//! * [`coordinator::Runner`] — in-process FL training with mobility.
+//! * [`coordinator::distributed`] — the same protocol over real TCP sockets
+//!   (one process per central server / edge server / device).
+//! * [`experiments`] — the paper's evaluation (Fig 3a/3b/3c, Fig 4, the
+//!   migration-overhead table), each regenerable via `cargo bench`.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod experiments;
+pub mod fl;
+pub mod json;
+pub mod manifest;
+pub mod metrics;
+pub mod migration;
+pub mod mobility;
+pub mod model;
+pub mod netsim;
+pub mod offload;
+pub mod proto;
+pub mod runtime;
+pub mod split;
+pub mod tensor;
+pub mod timesim;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,319 @@
+//! `fedfly` — CLI for the FedFly coordinator.
+//!
+//! Subcommands:
+//!   info                       print manifest / artifact summary
+//!   train [opts]               in-process FL run (real training)
+//!   fig3a|fig3b|fig3c          regenerate the paper's timing figures
+//!   fig4 [--frac 0.2]          regenerate the accuracy figure (scaled)
+//!   overhead                   migration-overhead table
+//!   central|edge|device        distributed-mode processes (see --help)
+
+
+use fedfly::config::{ExecMode, RunConfig};
+use fedfly::coordinator::{distributed, Runner};
+use fedfly::experiments;
+use fedfly::manifest::Manifest;
+use fedfly::migration::Strategy;
+use fedfly::mobility::Schedule;
+use fedfly::runtime::Engine;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: fedfly <command> [options]\n\
+         commands:\n\
+           info                         manifest / artifact summary\n\
+           train [--rounds N] [--sp K] [--batch B] [--strategy fedfly|restart]\n\
+                 [--move-at FRAC] [--samples N] [--sim] [--seed S]\n\
+           fig3a | fig3b | fig3c        paper timing figures (simulated testbed)\n\
+           fig4 [--frac F] [--rounds N] paper accuracy figure (real training)\n\
+           overhead                     migration overhead table\n\
+           multi                        simultaneous-mobility sweep (paper §VI)\n\
+           distributed [--rounds N]     threaded TCP deployment on localhost"
+    );
+    std::process::exit(2)
+}
+
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let val = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    i += 1;
+                    argv[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(name.to_string(), val);
+            } else {
+                eprintln!("unexpected argument {a:?}");
+                usage();
+            }
+            i += 1;
+        }
+        Args { flags }
+    }
+
+    fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.flags
+            .get(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else { usage() };
+    let args = Args::parse(&argv[1..]);
+    if let Err(e) = dispatch(cmd, &args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cmd: &str, args: &Args) -> fedfly::Result<()> {
+    match cmd {
+        "info" => info(),
+        "train" => train(args),
+        "fig3a" => {
+            let meta = experiments::load_meta()?;
+            print!("{}", experiments::render_fig3(&experiments::fig3a(&meta)?, "Fig 3a — 25% data on mobile device (SP2)"));
+            Ok(())
+        }
+        "fig3b" => {
+            let meta = experiments::load_meta()?;
+            print!("{}", experiments::render_fig3(&experiments::fig3b(&meta)?, "Fig 3b — 50% data on mobile device (SP2)"));
+            Ok(())
+        }
+        "fig3c" => {
+            let meta = experiments::load_meta()?;
+            print!("{}", experiments::render_fig3(&experiments::fig3c(&meta)?, "Fig 3c — split-point sweep (25% data, move at 90%)"));
+            Ok(())
+        }
+        "fig4" => fig4(args),
+        "overhead" => {
+            let meta = experiments::load_meta()?;
+            print!("{}", experiments::render_overhead(&experiments::overhead(&meta, 100)?));
+            Ok(())
+        }
+        "multi" => {
+            let meta = experiments::load_meta()?;
+            print!("{}", experiments::render_multi_mobility(&experiments::multi_mobility(&meta)?));
+            Ok(())
+        }
+        "distributed" => distributed_cmd(args),
+        "central" => central_cmd(args),
+        "edge" => edge_cmd(args),
+        "device" => device_cmd(args),
+        _ => usage(),
+    }
+}
+
+/// `fedfly central --listen 0.0.0.0:7000 --edges 2 --devices 4 --rounds 10`
+fn central_cmd(args: &Args) -> fedfly::Result<()> {
+    let meta = experiments::load_meta()?;
+    let listen: String = args.get("listen", "127.0.0.1:7000".into());
+    let n_edges = args.get("edges", 2usize);
+    let n_devices = args.get("devices", 4usize);
+    let rounds = args.get("rounds", 10u64);
+    let seed = args.get("seed", 7u64);
+    let listener = std::net::TcpListener::bind(&listen)?;
+    println!("central: listening on {listen} for {n_edges} edges, {n_devices} devices, {rounds} rounds");
+    let params = fedfly::coordinator::distributed::run_central(
+        listener,
+        n_edges,
+        n_devices,
+        rounds,
+        meta.init_params(seed),
+    )?;
+    let l2: f64 = params.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    println!("central: training complete, final params L2 = {l2:.4}");
+    Ok(())
+}
+
+/// `fedfly edge --id 0 --listen 127.0.0.1:7100 --central 127.0.0.1:7000
+///      --peers 127.0.0.1:7100,127.0.0.1:7101 [--sp 2] [--batch 16]`
+fn edge_cmd(args: &Args) -> fedfly::Result<()> {
+    let meta = experiments::load_meta()?;
+    let id = args.get("id", 0u64);
+    let listen: String = args.get("listen", format!("127.0.0.1:{}", 7100 + id));
+    let central: String = args.get("central", "127.0.0.1:7000".into());
+    let peers_s: String = args.get("peers", listen.clone());
+    let peers: Vec<std::net::SocketAddr> = peers_s
+        .split(',')
+        .map(|s| s.parse().map_err(|e| fedfly::Error::Config(format!("bad peer {s}: {e}"))))
+        .collect::<fedfly::Result<_>>()?;
+    let listener = std::net::TcpListener::bind(&listen)?;
+    println!("edge {id}: listening on {listen}, central {central}");
+    let handle = fedfly::coordinator::distributed::start_edge(
+        listener,
+        id,
+        central.parse().map_err(|e| fedfly::Error::Config(format!("bad central addr: {e}")))?,
+        peers,
+        meta.manifest.clone(),
+        args.get("sp", 2usize),
+        args.get("batch", 16usize),
+    )?;
+    // Serve until killed.
+    println!("edge {id}: serving (ctrl-c to stop)");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+        let _ = &handle;
+    }
+}
+
+/// `fedfly device --id 0 --edges 127.0.0.1:7100,127.0.0.1:7101
+///      [--initial-edge 0] [--move-round R --move-to E] [--rounds 10]`
+fn device_cmd(args: &Args) -> fedfly::Result<()> {
+    let meta = experiments::load_meta()?;
+    let id = args.get("id", 0u64);
+    let edges_s: String = args.get("edges", "127.0.0.1:7100,127.0.0.1:7101".into());
+    let edges: Vec<std::net::SocketAddr> = edges_s
+        .split(',')
+        .map(|s| s.parse().map_err(|e| fedfly::Error::Config(format!("bad edge {s}: {e}"))))
+        .collect::<fedfly::Result<_>>()?;
+    let rounds = args.get("rounds", 10u64);
+    let n_devices = args.get("devices", 4usize);
+    let train_samples = args.get("samples", 640usize);
+    let seed = args.get("seed", 7u64);
+    let move_round: i64 = args.get("move-round", -1);
+    let moves = if move_round >= 0 {
+        vec![(move_round as u64, args.get("move-to", 1usize))]
+    } else {
+        Vec::new()
+    };
+    let shards = fedfly::data::partition(
+        train_samples,
+        &fedfly::data::balanced_fractions(n_devices),
+        seed,
+    );
+    let mut root = fedfly::util::Rng::new(seed);
+    let rng_seed = root.fork(id).state()[0];
+    let cfg = fedfly::coordinator::distributed::DeviceConfig {
+        id,
+        sp: args.get("sp", 2usize),
+        batch: args.get("batch", 16usize),
+        rounds,
+        edges,
+        initial_edge: args.get("initial-edge", (id as usize) % 2),
+        moves,
+        strategy: if args.get::<String>("strategy", "fedfly".into()) == "restart" {
+            Strategy::Restart
+        } else {
+            Strategy::FedFly
+        },
+        sample_indices: shards[id as usize].indices.clone(),
+        data_seed: seed,
+        train_samples,
+        rng_seed,
+    };
+    let stats = fedfly::coordinator::distributed::run_device(cfg, meta.manifest.clone())?;
+    println!(
+        "device {}: {} batches, mean loss {:.4}, {} migrations ({:.3}s)",
+        stats.id, stats.batches, stats.mean_loss, stats.migrations, stats.migration_seconds
+    );
+    Ok(())
+}
+
+fn info() -> fedfly::Result<()> {
+    let m = Manifest::load_default()?;
+    println!("FedFly manifest @ {}", m.dir.display());
+    println!("  model: vgg5, {} params, lr={} momentum={}", m.total_params, m.lr, m.momentum);
+    println!("  batch variants: {:?}", m.batch_variants);
+    for (sp, s) in &m.splits {
+        println!(
+            "  SP{}: device {} / server {} params, smashed {:?}",
+            sp, s.device_params, s.server_params, s.smashed_shape
+        );
+    }
+    println!("  artifacts: {}", m.artifacts.len());
+    for (name, a) in &m.artifacts {
+        println!("    {name}: {} -> {} tensors", a.inputs.len(), a.outputs.len());
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> fedfly::Result<()> {
+    let mut cfg = RunConfig::small_real();
+    cfg.rounds = args.get("rounds", 10u64);
+    cfg.sp = args.get("sp", 2usize);
+    cfg.batch = args.get("batch", 16usize);
+    cfg.seed = args.get("seed", 7u64);
+    cfg.train_samples = args.get("samples", 640usize);
+    cfg.test_samples = cfg.train_samples / 4;
+    if args.has("sim") {
+        cfg.exec = ExecMode::SimOnly;
+        cfg.eval_every = None;
+    }
+    if args.get::<String>("strategy", "fedfly".into()) == "restart" {
+        cfg.strategy = Strategy::Restart;
+    }
+    let move_at: f64 = args.get("move-at", -1.0);
+    if move_at >= 0.0 {
+        cfg.schedule = Schedule::at_fraction(0, move_at, cfg.rounds, 1);
+    }
+
+    let meta = experiments::load_meta()?;
+    let engine = if cfg.exec == ExecMode::Real {
+        Some(Engine::new(meta.manifest.clone())?)
+    } else {
+        None
+    };
+    let report = Runner::new(cfg, meta)?.run(engine.as_ref())?;
+    for r in &report.rounds {
+        println!(
+            "round {:>3}  loss {:>7.4}  acc {}",
+            r.round,
+            r.mean_loss,
+            r.accuracy.map_or("-".into(), |a| format!("{a:.4}")),
+        );
+    }
+    for s in report.summaries() {
+        println!(
+            "device {}: {:.1}s sim/round effective, {} moves, migration {:.3}s host",
+            s.device, s.effective_time_per_round, s.moves, s.total_migration_host
+        );
+    }
+    Ok(())
+}
+
+fn fig4(args: &Args) -> fedfly::Result<()> {
+    let meta = experiments::load_meta()?;
+    let engine = Engine::new(meta.manifest.clone())?;
+    let mut scale = experiments::Fig4Scale::default();
+    scale.rounds = args.get("rounds", scale.rounds);
+    let frac: f64 = args.get("frac", 0.2);
+    let res = experiments::fig4(&engine, &meta, frac, scale)?;
+    print!("{}", experiments::render_fig4(&res));
+    Ok(())
+}
+
+fn distributed_cmd(args: &Args) -> fedfly::Result<()> {
+    let meta = experiments::load_meta()?;
+    let mut cfg = RunConfig::small_real();
+    cfg.rounds = args.get("rounds", 4u64);
+    cfg.train_samples = args.get("samples", 256usize);
+    cfg.test_samples = 64;
+    cfg.schedule = Schedule::at_fraction(0, 0.5, cfg.rounds, 1);
+    let run = distributed::run_in_threads(&cfg, meta.manifest.clone())?;
+    println!("distributed run complete; final params L2 = {:.4}",
+        run.final_params.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt());
+    for d in &run.devices {
+        println!(
+            "device {}: {} batches, mean loss {:.4}, {} migrations ({:.3}s)",
+            d.id, d.batches, d.mean_loss, d.migrations, d.migration_seconds
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,301 @@
+//! Parse `artifacts/manifest.json` — the contract between the AOT compiler
+//! (`python/compile/aot.py`) and the Rust coordinator.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::json::{self};
+
+/// One named tensor inside the flat parameter vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// Per-split-point metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SplitInfo {
+    pub sp: usize,
+    pub device_params: usize,
+    pub server_params: usize,
+    /// (H, W, C) of the smashed activation (batch dim excluded).
+    pub smashed_shape: Vec<usize>,
+    pub device_fwd_flops_per_image: f64,
+    pub server_fwd_flops_per_image: f64,
+}
+
+/// One AOT-compiled HLO artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub file: String,
+    pub phase: String,
+    pub sp: usize,
+    pub batch: usize,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub lr: f64,
+    pub momentum: f64,
+    pub num_classes: usize,
+    pub image_shape: Vec<usize>,
+    pub total_params: usize,
+    pub batch_variants: Vec<usize>,
+    pub params: Vec<ParamEntry>,
+    pub splits: BTreeMap<usize, SplitInfo>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+    /// Per-block forward FLOPs per image, device-side blocks first.
+    pub block_fwd_flops: Vec<f64>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Default location: `$FEDFLY_ARTIFACTS` or `<crate root>/artifacts`.
+    pub fn load_default() -> Result<Manifest> {
+        let dir = std::env::var("FEDFLY_ARTIFACTS")
+            .unwrap_or_else(|_| concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string());
+        Self::load(dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let v = json::parse(text)?;
+
+        let params = v
+            .get("params")?
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("params is not an array".into()))?
+            .iter()
+            .map(|p| {
+                Ok(ParamEntry {
+                    name: p.get_str("name")?.to_string(),
+                    shape: p.get_usize_arr("shape")?,
+                    offset: p.get_usize("offset")?,
+                    len: p.get_usize("len")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut splits = BTreeMap::new();
+        for (k, s) in v
+            .get("splits")?
+            .as_obj()
+            .ok_or_else(|| Error::Manifest("splits is not an object".into()))?
+        {
+            let sp: usize = k
+                .parse()
+                .map_err(|_| Error::Manifest(format!("bad split key {k:?}")))?;
+            splits.insert(
+                sp,
+                SplitInfo {
+                    sp,
+                    device_params: s.get_usize("device_params")?,
+                    server_params: s.get_usize("server_params")?,
+                    smashed_shape: s.get_usize_arr("smashed_shape")?,
+                    device_fwd_flops_per_image: s.get_f64("device_fwd_flops_per_image")?,
+                    server_fwd_flops_per_image: s.get_f64("server_fwd_flops_per_image")?,
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in v
+            .get("artifacts")?
+            .as_obj()
+            .ok_or_else(|| Error::Manifest("artifacts is not an object".into()))?
+        {
+            let shapes = |key: &str| -> Result<Vec<Vec<usize>>> {
+                a.get(key)?
+                    .as_arr()
+                    .ok_or_else(|| Error::Manifest(format!("{key} not an array")))?
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .ok_or_else(|| Error::Manifest("shape not an array".into()))?
+                            .iter()
+                            .map(|d| {
+                                d.as_usize()
+                                    .ok_or_else(|| Error::Manifest("bad dim".into()))
+                            })
+                            .collect()
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactInfo {
+                    name: name.clone(),
+                    file: a.get_str("file")?.to_string(),
+                    phase: a.get_str("phase")?.to_string(),
+                    sp: a.get_usize("sp")?,
+                    batch: a.get_usize("batch")?,
+                    inputs: shapes("inputs")?,
+                    outputs: shapes("outputs")?,
+                },
+            );
+        }
+
+        let block_fwd_flops = v
+            .get("blocks")?
+            .as_arr()
+            .ok_or_else(|| Error::Manifest("blocks is not an array".into()))?
+            .iter()
+            .map(|b| b.get_f64("fwd_flops_per_image"))
+            .collect::<Result<Vec<_>>>()?;
+
+        let m = Manifest {
+            dir,
+            lr: v.get_f64("lr")?,
+            momentum: v.get_f64("momentum")?,
+            num_classes: v.get_usize("num_classes")?,
+            image_shape: v.get_usize_arr("image_shape")?,
+            total_params: v.get_usize("total_params")?,
+            batch_variants: v.get_usize_arr("batch_variants")?,
+            params,
+            splits,
+            artifacts,
+            block_fwd_flops,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Internal-consistency checks on the layout and split metadata.
+    pub fn validate(&self) -> Result<()> {
+        let mut off = 0;
+        for p in &self.params {
+            if p.offset != off {
+                return Err(Error::Manifest(format!(
+                    "param {} offset {} != running offset {off}",
+                    p.name, p.offset
+                )));
+            }
+            let n: usize = p.shape.iter().product();
+            if n != p.len {
+                return Err(Error::Manifest(format!("param {} len mismatch", p.name)));
+            }
+            off += p.len;
+        }
+        if off != self.total_params {
+            return Err(Error::Manifest(format!(
+                "layout sums to {off}, manifest says {}",
+                self.total_params
+            )));
+        }
+        for s in self.splits.values() {
+            if s.device_params + s.server_params != self.total_params {
+                return Err(Error::Manifest(format!("split {} halves don't sum", s.sp)));
+            }
+        }
+        if self.artifacts.is_empty() {
+            return Err(Error::Manifest("no artifacts".into()));
+        }
+        Ok(())
+    }
+
+    pub fn split(&self, sp: usize) -> Result<&SplitInfo> {
+        self.splits
+            .get(&sp)
+            .ok_or_else(|| Error::Manifest(format!("no split point {sp}")))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactInfo> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("no artifact {name:?}")))
+    }
+
+    /// Absolute path of an artifact's HLO text.
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Number of f32 elements in the smashed activation for (sp, batch).
+    pub fn smashed_elems(&self, sp: usize, batch: usize) -> Result<usize> {
+        Ok(batch * self.split(sp)?.smashed_shape.iter().product::<usize>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest() -> String {
+        r#"{
+          "lr": 0.01, "momentum": 0.9, "num_classes": 10,
+          "image_shape": [32, 32, 3], "total_params": 10,
+          "batch_variants": [4],
+          "params": [
+            {"name": "w", "shape": [2, 3], "offset": 0, "len": 6},
+            {"name": "b", "shape": [4], "offset": 6, "len": 4}
+          ],
+          "blocks": [{"name": "block0", "fwd_flops_per_image": 100.0, "params": ["w"]}],
+          "splits": {"1": {"device_params": 6, "server_params": 4,
+                           "smashed_shape": [2, 2, 1],
+                           "device_fwd_flops_per_image": 100.0,
+                           "server_fwd_flops_per_image": 50.0}},
+          "artifacts": {"device_fwd_sp1_b4": {
+              "file": "device_fwd_sp1_b4.hlo.txt", "phase": "device_fwd",
+              "sp": 1, "batch": 4, "inputs": [[6], [4, 32, 32, 3]],
+              "outputs": [[4, 2, 2, 1]], "hlo_bytes": 1, "sha256": "x"}}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_mini_manifest() {
+        let m = Manifest::parse(&mini_manifest(), PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.total_params, 10);
+        assert_eq!(m.params[1].offset, 6);
+        assert_eq!(m.split(1).unwrap().smashed_shape, vec![2, 2, 1]);
+        assert_eq!(m.smashed_elems(1, 4).unwrap(), 16);
+        assert_eq!(
+            m.artifact_path("device_fwd_sp1_b4").unwrap(),
+            PathBuf::from("/tmp/device_fwd_sp1_b4.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn rejects_bad_offsets() {
+        let bad = mini_manifest().replace("\"offset\": 6", "\"offset\": 7");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_split_sum_mismatch() {
+        let bad = mini_manifest().replace("\"server_params\": 4", "\"server_params\": 5");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        if let Ok(m) = Manifest::load_default() {
+            assert_eq!(m.total_params, 582026);
+            assert_eq!(m.splits.len(), 3);
+            assert_eq!(m.artifacts.len(), 22);
+            assert_eq!(m.split(2).unwrap().device_params, 19392);
+            // artifact IO sanity: device_fwd_sp2_b16 output == smashed shape
+            let a = m.artifact("device_fwd_sp2_b16").unwrap();
+            assert_eq!(a.outputs[0], vec![16, 8, 8, 64]);
+        }
+    }
+}

@@ -1,0 +1,291 @@
+//! Run records and reporting: per-device per-round timings, accuracy
+//! curves, CSV/JSON export, and the per-run summary the figure benches
+//! print.
+
+use crate::json::{self, Value};
+
+/// One device's account of one FL round.
+#[derive(Clone, Debug)]
+pub struct DeviceRound {
+    pub device: usize,
+    pub round: u64,
+    pub edge: usize,
+    /// Simulated testbed seconds of local split-training work.
+    pub sim_seconds: f64,
+    /// Measured host seconds spent in PJRT for this device's work.
+    pub host_seconds: f64,
+    /// Mean batch loss (NaN in simulate-only mode).
+    pub loss: f32,
+    /// Device moved at the start of this round.
+    pub migrated: bool,
+    /// FedFly: simulated checkpoint-transfer overhead (seconds).
+    pub migration_sim_seconds: f64,
+    /// FedFly: measured codec+transport seconds (localhost).
+    pub migration_host_seconds: f64,
+    /// SplitFed restart: simulated catch-up cost (redone rounds).
+    pub restart_penalty_sim_seconds: f64,
+    /// FedFly transfer was lost/corrupted and fell back to restart.
+    pub migration_failed: bool,
+}
+
+/// One FL round.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: u64,
+    pub mean_loss: f32,
+    pub accuracy: Option<f64>,
+    pub devices: Vec<DeviceRound>,
+}
+
+/// A whole training run.
+#[derive(Clone, Debug, Default)]
+pub struct RunReport {
+    pub strategy: String,
+    pub sp: usize,
+    pub rounds: Vec<RoundRecord>,
+    /// Final global parameter vector (for state-equivalence tests; empty
+    /// if the producer does not track parameters).
+    pub final_params: Vec<f32>,
+}
+
+/// Per-device summary over a run (the Fig-3 quantity).
+#[derive(Clone, Debug)]
+pub struct DeviceSummary {
+    pub device: usize,
+    /// Mean per-round *productive* training time (simulated testbed s).
+    pub sim_time_per_round: f64,
+    /// Mean per-round time including migration overheads / restart
+    /// penalties — the "device training time per round" the paper plots.
+    pub effective_time_per_round: f64,
+    pub total_migration_sim: f64,
+    pub total_migration_host: f64,
+    pub total_restart_penalty: f64,
+    pub moves: usize,
+    /// FedFly transfers that were lost and fell back to restart.
+    pub failed_migrations: usize,
+}
+
+impl RunReport {
+    pub fn n_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.rounds.first().map_or(0, |r| r.devices.len())
+    }
+
+    pub fn device_summary(&self, device: usize) -> DeviceSummary {
+        let mut sim = 0.0;
+        let mut mig_sim = 0.0;
+        let mut mig_host = 0.0;
+        let mut penalty = 0.0;
+        let mut moves = 0;
+        let mut failed_migrations = 0;
+        for r in &self.rounds {
+            let d = &r.devices[device];
+            sim += d.sim_seconds;
+            mig_sim += d.migration_sim_seconds;
+            mig_host += d.migration_host_seconds;
+            penalty += d.restart_penalty_sim_seconds;
+            moves += d.migrated as usize;
+            failed_migrations += d.migration_failed as usize;
+        }
+        let n = self.rounds.len().max(1) as f64;
+        DeviceSummary {
+            device,
+            sim_time_per_round: sim / n,
+            effective_time_per_round: (sim + mig_sim + penalty) / n,
+            total_migration_sim: mig_sim,
+            total_migration_host: mig_host,
+            total_restart_penalty: penalty,
+            moves,
+            failed_migrations,
+        }
+    }
+
+    pub fn summaries(&self) -> Vec<DeviceSummary> {
+        (0..self.n_devices()).map(|d| self.device_summary(d)).collect()
+    }
+
+    /// (round, accuracy) points where evaluation ran.
+    pub fn accuracy_curve(&self) -> Vec<(u64, f64)> {
+        self.rounds
+            .iter()
+            .filter_map(|r| r.accuracy.map(|a| (r.round, a)))
+            .collect()
+    }
+
+    /// (round, mean loss) curve.
+    pub fn loss_curve(&self) -> Vec<(u64, f32)> {
+        self.rounds.iter().map(|r| (r.round, r.mean_loss)).collect()
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.rounds.iter().rev().find_map(|r| r.accuracy)
+    }
+
+    /// CSV of per-device per-round records.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,device,edge,sim_seconds,host_seconds,loss,migrated,\
+             migration_sim_s,migration_host_s,restart_penalty_s,accuracy\n",
+        );
+        for r in &self.rounds {
+            for d in &r.devices {
+                out.push_str(&format!(
+                    "{},{},{},{:.6},{:.6},{:.6},{},{:.6},{:.6},{:.6},{}\n",
+                    r.round,
+                    d.device,
+                    d.edge,
+                    d.sim_seconds,
+                    d.host_seconds,
+                    d.loss,
+                    d.migrated as u8,
+                    d.migration_sim_seconds,
+                    d.migration_host_seconds,
+                    d.restart_penalty_sim_seconds,
+                    r.accuracy.map_or(String::new(), |a| format!("{a:.4}")),
+                ));
+            }
+        }
+        out
+    }
+
+    /// JSON report (summaries + curves).
+    pub fn to_json(&self) -> Value {
+        json::obj(vec![
+            ("strategy", json::s(self.strategy.clone())),
+            ("sp", json::num(self.sp as f64)),
+            ("rounds", json::num(self.n_rounds() as f64)),
+            (
+                "device_summaries",
+                json::arr(
+                    self.summaries()
+                        .iter()
+                        .map(|s| {
+                            json::obj(vec![
+                                ("device", json::num(s.device as f64)),
+                                ("sim_time_per_round", json::num(s.sim_time_per_round)),
+                                (
+                                    "effective_time_per_round",
+                                    json::num(s.effective_time_per_round),
+                                ),
+                                ("total_migration_sim", json::num(s.total_migration_sim)),
+                                ("total_migration_host", json::num(s.total_migration_host)),
+                                (
+                                    "total_restart_penalty",
+                                    json::num(s.total_restart_penalty),
+                                ),
+                                ("moves", json::num(s.moves as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "accuracy_curve",
+                json::arr(
+                    self.accuracy_curve()
+                        .iter()
+                        .map(|(r, a)| json::arr(vec![json::num(*r as f64), json::num(*a)]))
+                        .collect(),
+                ),
+            ),
+            (
+                "loss_curve",
+                json::arr(
+                    self.loss_curve()
+                        .iter()
+                        .map(|(r, l)| json::arr(vec![json::num(*r as f64), json::num(*l as f64)]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> RunReport {
+        let mk = |round: u64, migrated: bool, penalty: f64| RoundRecord {
+            round,
+            mean_loss: 2.0 - round as f32 * 0.1,
+            accuracy: if round % 2 == 0 { Some(0.5 + round as f64 / 100.0) } else { None },
+            devices: vec![
+                DeviceRound {
+                    device: 0,
+                    round,
+                    edge: 0,
+                    sim_seconds: 10.0,
+                    host_seconds: 0.5,
+                    loss: 2.0,
+                    migrated,
+                    migration_sim_seconds: if migrated { 1.5 } else { 0.0 },
+                    migration_host_seconds: if migrated { 0.01 } else { 0.0 },
+                    restart_penalty_sim_seconds: penalty,
+                    migration_failed: false,
+                },
+                DeviceRound {
+                    device: 1,
+                    round,
+                    edge: 1,
+                    sim_seconds: 20.0,
+                    host_seconds: 0.7,
+                    loss: 2.1,
+                    migrated: false,
+                    migration_sim_seconds: 0.0,
+                    migration_host_seconds: 0.0,
+                    restart_penalty_sim_seconds: 0.0,
+                    migration_failed: false,
+                },
+            ],
+        };
+        RunReport {
+            strategy: "fedfly".into(),
+            sp: 2,
+            rounds: vec![mk(0, false, 0.0), mk(1, true, 0.0), mk(2, false, 30.0)],
+            final_params: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn summaries_aggregate() {
+        let r = report();
+        let s0 = r.device_summary(0);
+        assert_eq!(s0.moves, 1);
+        assert!((s0.sim_time_per_round - 10.0).abs() < 1e-9);
+        // (30 sim + 1.5 mig + 30 penalty) / 3
+        assert!((s0.effective_time_per_round - (30.0 + 1.5 + 30.0) / 3.0).abs() < 1e-9);
+        let s1 = r.device_summary(1);
+        assert_eq!(s1.moves, 0);
+        assert!((s1.effective_time_per_round - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn curves() {
+        let r = report();
+        assert_eq!(r.accuracy_curve().len(), 2);
+        assert_eq!(r.loss_curve().len(), 3);
+        assert_eq!(r.final_accuracy(), Some(0.52));
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let r = report();
+        let csv = r.to_csv();
+        assert_eq!(csv.lines().count(), 1 + 3 * 2);
+        assert!(csv.starts_with("round,device"));
+    }
+
+    #[test]
+    fn json_roundtrips_through_parser() {
+        let r = report();
+        let v = r.to_json();
+        let text = json::to_string_pretty(&v);
+        let back = json::parse(&text).unwrap();
+        assert_eq!(back.get_str("strategy").unwrap(), "fedfly");
+        assert_eq!(back.get_usize("rounds").unwrap(), 3);
+    }
+}

@@ -1,0 +1,311 @@
+//! Versioned binary codec for migration checkpoints.
+//!
+//! Layout: magic "FDFL", format version, header fields, f32 payloads, and
+//! a trailing CRC32 over everything before it.  All integers are LE.
+//! Float payloads are bit-preserved — migration must be lossless for the
+//! bit-exact-resume invariant to hold.
+
+use crate::error::{Error, Result};
+use crate::util::bytes::{put_f32, put_f32_slice, put_u32, put_u64, Reader};
+
+const MAGIC: &[u8; 4] = b"FDFL";
+/// Magic for the zstd-compressed envelope (paper §VI "communication
+/// overhead" future work: compress the checkpoint before migration).
+const MAGIC_Z: &[u8; 4] = b"FDFZ";
+pub const VERSION: u32 = 1;
+
+/// Default zstd level for checkpoint compression: fast enough that the
+/// codec never dominates the 75 Mbps link it is trying to save.
+pub const ZSTD_LEVEL: i32 = 3;
+
+/// The training state the source edge server checkpoints when a device
+/// announces a move (paper §IV "Model data checkpoint").
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Which device this state belongs to.
+    pub device_id: u64,
+    /// Split point the pair was training at.
+    pub sp: u32,
+    /// FL round at which the device moved.
+    pub round: u64,
+    /// Completed local epochs within the round.
+    pub epoch: u64,
+    /// Completed batches within the epoch (mid-epoch moves resume here).
+    pub batch_idx: u64,
+    /// Last training loss observed at the source edge.
+    pub loss: f32,
+    /// Server-side model weights ("model weights").
+    pub server_params: Vec<f32>,
+    /// Server-side SGD momentum ("state of optimizer").
+    pub server_momentum: Vec<f32>,
+    /// Gradient of the smashed activation from the last server step
+    /// ("gradients") — lets the device finish an in-flight backward.
+    pub grad_smashed: Vec<f32>,
+    /// Device batch-schedule RNG state, so the resumed run replays the
+    /// exact batch order of an unmigrated run.
+    pub rng_state: [u64; 4],
+}
+
+impl Checkpoint {
+    /// Approximate wire size in bytes.
+    pub fn wire_bytes(&self) -> usize {
+        4 + 4
+            + 8 * 4
+            + 4 * 2
+            + 4
+            + (self.server_params.len() + self.server_momentum.len() + self.grad_smashed.len())
+                * 4
+            + 8 * 3
+            + 8 * 4
+            + 4
+    }
+}
+
+/// Encode a checkpoint to bytes.
+pub fn encode(ck: &Checkpoint) -> Vec<u8> {
+    let mut b = Vec::with_capacity(ck.wire_bytes());
+    b.extend_from_slice(MAGIC);
+    put_u32(&mut b, VERSION);
+    put_u64(&mut b, ck.device_id);
+    put_u32(&mut b, ck.sp);
+    put_u64(&mut b, ck.round);
+    put_u64(&mut b, ck.epoch);
+    put_u64(&mut b, ck.batch_idx);
+    put_f32(&mut b, ck.loss);
+    put_f32_slice(&mut b, &ck.server_params);
+    put_f32_slice(&mut b, &ck.server_momentum);
+    put_f32_slice(&mut b, &ck.grad_smashed);
+    for s in ck.rng_state {
+        put_u64(&mut b, s);
+    }
+    let crc = crc32fast::hash(&b);
+    put_u32(&mut b, crc);
+    b
+}
+
+/// Encode with zstd compression (a `FDFZ` envelope around [`encode`]'s
+/// output).  Trained f32 weights are high-entropy so ratios are modest,
+/// but zero momentum/gradient stretches early in training compress well.
+pub fn encode_compressed(ck: &Checkpoint, level: i32) -> Result<Vec<u8>> {
+    let raw = encode(ck);
+    let compressed = zstd::bulk::compress(&raw, level)
+        .map_err(|e| Error::Codec(format!("zstd compress: {e}")))?;
+    let mut out = Vec::with_capacity(compressed.len() + 16);
+    out.extend_from_slice(MAGIC_Z);
+    crate::util::bytes::put_u64(&mut out, raw.len() as u64);
+    out.extend_from_slice(&compressed);
+    Ok(out)
+}
+
+/// Decode either envelope: raw (`FDFL...`) or compressed (`FDFZ`).
+pub fn decode_auto(bytes: &[u8]) -> Result<Checkpoint> {
+    if bytes.len() >= 12 && &bytes[..4] == MAGIC_Z {
+        let mut r = Reader::new(&bytes[4..12]);
+        let raw_len = r.u64().map_err(Error::Codec)? as usize;
+        if raw_len > (1 << 31) {
+            return Err(Error::Codec(format!("absurd raw length {raw_len}")));
+        }
+        let raw = zstd::bulk::decompress(&bytes[12..], raw_len)
+            .map_err(|e| Error::Codec(format!("zstd decompress: {e}")))?;
+        return decode(&raw);
+    }
+    decode(bytes)
+}
+
+/// Decode and validate a checkpoint.
+pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+    if bytes.len() < 12 {
+        return Err(Error::Codec("checkpoint too short".into()));
+    }
+    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    if crc32fast::hash(body) != stored {
+        return Err(Error::Codec("crc mismatch (corrupt checkpoint)".into()));
+    }
+    if &body[..4] != MAGIC {
+        return Err(Error::Codec("bad magic".into()));
+    }
+    let mut r = Reader::new(&body[4..]);
+    let e = |m: String| Error::Codec(m);
+    let version = r.u32().map_err(e)?;
+    if version != VERSION {
+        return Err(Error::Codec(format!(
+            "unsupported checkpoint version {version} (supported: {VERSION})"
+        )));
+    }
+    let device_id = r.u64().map_err(e)?;
+    let sp = r.u32().map_err(e)?;
+    let round = r.u64().map_err(e)?;
+    let epoch = r.u64().map_err(e)?;
+    let batch_idx = r.u64().map_err(e)?;
+    let loss = r.f32().map_err(e)?;
+    let server_params = r.f32_vec().map_err(e)?;
+    let server_momentum = r.f32_vec().map_err(e)?;
+    let grad_smashed = r.f32_vec().map_err(e)?;
+    let mut rng_state = [0u64; 4];
+    for s in &mut rng_state {
+        *s = r.u64().map_err(e)?;
+    }
+    if r.remaining() != 0 {
+        return Err(Error::Codec(format!(
+            "{} trailing bytes after checkpoint",
+            r.remaining()
+        )));
+    }
+    if server_params.len() != server_momentum.len() {
+        return Err(Error::Codec(
+            "params/momentum length mismatch".into(),
+        ));
+    }
+    Ok(Checkpoint {
+        device_id,
+        sp,
+        round,
+        epoch,
+        batch_idx,
+        loss,
+        server_params,
+        server_momentum,
+        grad_smashed,
+        rng_state,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sample(seed: u64, n: usize) -> Checkpoint {
+        let mut r = Rng::new(seed);
+        Checkpoint {
+            device_id: r.next_u64(),
+            sp: 1 + (r.below(3) as u32),
+            round: r.next_u64() % 1000,
+            epoch: r.next_u64() % 10,
+            batch_idx: r.next_u64() % 100,
+            loss: r.gaussian() as f32,
+            server_params: (0..n).map(|_| r.gaussian() as f32).collect(),
+            server_momentum: (0..n).map(|_| r.gaussian() as f32).collect(),
+            grad_smashed: (0..r.below(512)).map(|_| r.gaussian() as f32).collect(),
+            rng_state: [r.next_u64(), r.next_u64(), r.next_u64(), r.next_u64()],
+        }
+    }
+
+    #[test]
+    fn roundtrip_bit_exact() {
+        let ck = sample(1, 1000);
+        let out = decode(&encode(&ck)).unwrap();
+        assert_eq!(ck, out);
+        for (a, b) in ck.server_params.iter().zip(&out.server_params) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_special_floats() {
+        let mut ck = sample(2, 4);
+        ck.server_params = vec![0.0, -0.0, f32::NAN, f32::INFINITY];
+        ck.loss = f32::NEG_INFINITY;
+        let out = decode(&encode(&ck)).unwrap();
+        assert_eq!(out.server_params[0].to_bits(), 0.0f32.to_bits());
+        assert_eq!(out.server_params[1].to_bits(), (-0.0f32).to_bits());
+        assert!(out.server_params[2].is_nan());
+        assert_eq!(out.server_params[3], f32::INFINITY);
+        assert_eq!(out.loss, f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn corruption_detected_anywhere() {
+        let ck = sample(3, 256);
+        let blob = encode(&ck);
+        let mut r = Rng::new(9);
+        for _ in 0..32 {
+            let mut bad = blob.clone();
+            let i = r.below(bad.len());
+            bad[i] ^= 1 << r.below(8);
+            // Either the CRC catches it, or (if the flipped bit is in the
+            // CRC itself) the mismatch still errors.
+            assert!(decode(&bad).is_err(), "flip at byte {i} went undetected");
+        }
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let blob = encode(&sample(4, 64));
+        for cut in [0, 1, 11, blob.len() / 2, blob.len() - 1] {
+            assert!(decode(&blob[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let ck = sample(5, 8);
+        let mut blob = encode(&ck);
+        blob[4] = 99; // version byte
+        // fix up CRC so only the version check can fire
+        let n = blob.len();
+        let crc = crc32fast::hash(&blob[..n - 4]);
+        blob[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let err = decode(&blob).unwrap_err();
+        assert!(err.to_string().contains("version"));
+    }
+
+    #[test]
+    fn wire_bytes_close_to_actual() {
+        let ck = sample(6, 10_000);
+        let actual = encode(&ck).len();
+        let est = ck.wire_bytes();
+        assert!((actual as i64 - est as i64).unsigned_abs() < 128);
+    }
+
+    #[test]
+    fn prop_roundtrip_random() {
+        use crate::util::prop::forall;
+        forall(30, |r| {
+            let ck = sample(r.next_u64(), r.below(5000));
+            assert_eq!(decode(&encode(&ck)).unwrap(), ck);
+        });
+    }
+
+    #[test]
+    fn compressed_roundtrip_bit_exact() {
+        let ck = sample(7, 10_000);
+        let blob = encode_compressed(&ck, ZSTD_LEVEL).unwrap();
+        let out = decode_auto(&blob).unwrap();
+        assert_eq!(ck, out);
+        for (a, b) in ck.server_momentum.iter().zip(&out.server_momentum) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn decode_auto_accepts_raw() {
+        let ck = sample(8, 100);
+        assert_eq!(decode_auto(&encode(&ck)).unwrap(), ck);
+    }
+
+    #[test]
+    fn zero_momentum_compresses_well() {
+        // Early-training checkpoints (zero momentum, zero grads) should
+        // shrink a lot — the paper's communication-overhead future work.
+        let mut ck = sample(9, 50_000);
+        ck.server_momentum = vec![0.0; 50_000];
+        ck.grad_smashed = vec![0.0; 10_000];
+        let raw = encode(&ck).len();
+        let z = encode_compressed(&ck, ZSTD_LEVEL).unwrap().len();
+        assert!(
+            (z as f64) < raw as f64 * 0.8,
+            "compression ratio too weak: {z}/{raw}"
+        );
+    }
+
+    #[test]
+    fn corrupt_compressed_detected() {
+        let ck = sample(10, 1000);
+        let mut blob = encode_compressed(&ck, ZSTD_LEVEL).unwrap();
+        let n = blob.len();
+        blob[n / 2] ^= 0xFF;
+        assert!(decode_auto(&blob).is_err());
+    }
+}

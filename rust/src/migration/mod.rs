@@ -1,0 +1,60 @@
+//! The paper's contribution: migration of the edge-side training state
+//! when a device moves between edge servers during FL training.
+//!
+//! * [`Checkpoint`] — exactly the state the paper lists in §IV ("epoch
+//!   number, gradients, model weights, loss value, and state of
+//!   optimizer"), plus the device's RNG state so the resumed batch
+//!   schedule replays bit-exactly.
+//! * [`codec`] — versioned, CRC-protected binary encoding.
+//! * [`transport`] — edge-to-edge socket transfer (the paper's default)
+//!   and the device-relayed fallback (§IV last paragraph).
+//! * [`Strategy`] — `FedFly` (checkpoint + resume) vs the SplitFed
+//!   baseline `Restart` (destination edge has no state; training restarts).
+
+pub mod codec;
+pub mod transport;
+
+pub use codec::{decode, encode, Checkpoint};
+pub use transport::{InMemTransport, TcpCheckpointServer, Transport};
+
+/// What happens to edge-side training state when a device moves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Paper's system: checkpoint at the source edge, transfer to the
+    /// destination edge, resume exactly where training stopped.
+    FedFly,
+    /// SplitFed baseline: no migration; the destination edge server has no
+    /// copy of the model state, so all training progress accumulated on
+    /// the source edge is lost and must be redone (paper §IV: "all the
+    /// training is lost until the 50th round, and training is restarted").
+    Restart,
+}
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::FedFly => "fedfly",
+            Strategy::Restart => "splitfed-restart",
+        }
+    }
+}
+
+/// How the checkpoint travels between edges (paper §IV last paragraph).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MigrationRoute {
+    /// Source edge -> destination edge directly (paper default).
+    EdgeToEdge,
+    /// Source edge -> device -> destination edge (edges cannot talk).
+    ViaDevice,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_names() {
+        assert_eq!(Strategy::FedFly.name(), "fedfly");
+        assert_eq!(Strategy::Restart.name(), "splitfed-restart");
+    }
+}

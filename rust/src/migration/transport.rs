@@ -1,0 +1,227 @@
+//! Checkpoint transfer between edge servers.
+//!
+//! The paper transfers checkpointed data "via a socket" (§IV Step 8).
+//! [`TcpCheckpointServer`]/[`send_checkpoint_tcp`] implement exactly that
+//! over `std::net`; [`InMemTransport`] is the in-process equivalent used
+//! by the single-process coordinator (same codec, same semantics, no
+//! kernel round-trip).  Both report the measured wall-clock transfer time
+//! so the overhead table can contrast measured (localhost) vs simulated
+//! (75 Mbps testbed) costs.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::migration::codec::{decode, encode, Checkpoint};
+use crate::proto::{read_msg, write_msg, Msg};
+
+/// A checkpoint transfer mechanism between a source and destination edge.
+pub trait Transport {
+    /// Ship `ck` to destination edge `dest`; returns measured seconds.
+    fn send(&self, dest: usize, ck: &Checkpoint) -> Result<f64>;
+    /// Take the checkpoint for `device` at edge `dest`, if one arrived.
+    fn receive(&self, dest: usize, device: u64) -> Result<Option<Checkpoint>>;
+}
+
+// ---------------------------------------------------------------------------
+// In-memory transport (single-process coordinator)
+
+/// Mailbox-per-edge in-memory transport.
+#[derive(Default)]
+pub struct InMemTransport {
+    mailboxes: Mutex<HashMap<(usize, u64), Checkpoint>>,
+}
+
+impl InMemTransport {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Transport for InMemTransport {
+    fn send(&self, dest: usize, ck: &Checkpoint) -> Result<f64> {
+        let t0 = Instant::now();
+        // Encode/decode anyway: the in-process path must exercise the same
+        // codec as the socket path (and pays its real CPU cost).
+        let blob = encode(ck);
+        let decoded = decode(&blob)?;
+        self.mailboxes
+            .lock()
+            .unwrap()
+            .insert((dest, decoded.device_id), decoded);
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn receive(&self, dest: usize, device: u64) -> Result<Option<Checkpoint>> {
+        Ok(self.mailboxes.lock().unwrap().remove(&(dest, device)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP transport (distributed mode; also used by the overhead bench)
+
+/// A destination edge server's checkpoint listener: accepts
+/// `CheckpointTransfer` frames and parks them for pickup.
+pub struct TcpCheckpointServer {
+    addr: SocketAddr,
+    inbox: Arc<Mutex<HashMap<u64, Checkpoint>>>,
+    done_rx: Option<mpsc::Receiver<()>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl TcpCheckpointServer {
+    /// Bind on 127.0.0.1:0 and serve `expected` transfers in a thread.
+    pub fn start(expected: usize) -> Result<Self> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let inbox: Arc<Mutex<HashMap<u64, Checkpoint>>> = Arc::new(Mutex::new(HashMap::new()));
+        let inbox2 = inbox.clone();
+        let (done_tx, done_rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            for _ in 0..expected {
+                let Ok((mut stream, _)) = listener.accept() else {
+                    break;
+                };
+                match read_msg(&mut stream) {
+                    Ok(Msg::CheckpointTransfer { device, blob }) => {
+                        match decode(&blob) {
+                            Ok(ck) => {
+                                inbox2.lock().unwrap().insert(device, ck);
+                                let _ = write_msg(&mut stream, &Msg::Ack { code: 0 });
+                            }
+                            Err(_) => {
+                                let _ = write_msg(&mut stream, &Msg::Ack { code: 1 });
+                            }
+                        }
+                    }
+                    _ => {
+                        let _ = write_msg(&mut stream, &Msg::Ack { code: 2 });
+                    }
+                }
+            }
+            let _ = done_tx.send(());
+        });
+        Ok(TcpCheckpointServer {
+            addr,
+            inbox,
+            done_rx: Some(done_rx),
+            handle: Some(handle),
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Pop a received checkpoint.
+    pub fn take(&self, device: u64) -> Option<Checkpoint> {
+        self.inbox.lock().unwrap().remove(&device)
+    }
+
+    /// Wait for the serving thread to finish all expected transfers.
+    pub fn join(mut self) -> Result<()> {
+        if let Some(rx) = self.done_rx.take() {
+            let _ = rx.recv();
+        }
+        if let Some(h) = self.handle.take() {
+            h.join().map_err(|_| Error::other("server thread panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+/// Ship a checkpoint to a destination edge's listener over TCP; returns
+/// (measured seconds, wire bytes).
+pub fn send_checkpoint_tcp(dest: SocketAddr, ck: &Checkpoint) -> Result<(f64, usize)> {
+    let blob = encode(ck);
+    let bytes = blob.len();
+    let t0 = Instant::now();
+    let mut stream = TcpStream::connect(dest)?;
+    stream.set_nodelay(true)?;
+    write_msg(
+        &mut stream,
+        &Msg::CheckpointTransfer {
+            device: ck.device_id,
+            blob,
+        },
+    )?;
+    match read_msg(&mut stream)? {
+        Msg::Ack { code: 0 } => Ok((t0.elapsed().as_secs_f64(), bytes)),
+        Msg::Ack { code } => Err(Error::Proto(format!("destination rejected: code {code}"))),
+        other => Err(Error::Proto(format!("unexpected reply {other:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ck(device: u64, n: usize) -> Checkpoint {
+        Checkpoint {
+            device_id: device,
+            sp: 2,
+            round: 50,
+            epoch: 1,
+            batch_idx: 3,
+            loss: 1.25,
+            server_params: (0..n).map(|i| i as f32 * 0.5).collect(),
+            server_momentum: vec![0.1; n],
+            grad_smashed: vec![0.0; 64],
+            rng_state: [1, 2, 3, 4],
+        }
+    }
+
+    #[test]
+    fn inmem_roundtrip() {
+        let t = InMemTransport::new();
+        let c = ck(7, 100);
+        let secs = t.send(1, &c).unwrap();
+        assert!(secs >= 0.0);
+        assert_eq!(t.receive(1, 7).unwrap().unwrap(), c);
+        // second receive is empty
+        assert!(t.receive(1, 7).unwrap().is_none());
+        // wrong edge is empty
+        assert!(t.receive(0, 7).unwrap().is_none());
+    }
+
+    #[test]
+    fn tcp_roundtrip_single() {
+        let server = TcpCheckpointServer::start(1).unwrap();
+        let c = ck(3, 5000);
+        let (secs, bytes) = send_checkpoint_tcp(server.addr(), &c).unwrap();
+        assert!(secs > 0.0);
+        assert!(bytes > 5000 * 8);
+        server.join().unwrap();
+        // after join, the checkpoint is in the inbox — but `join` consumed
+        // self, so check via a fresh pattern below instead.
+    }
+
+    #[test]
+    fn tcp_roundtrip_take() {
+        let server = TcpCheckpointServer::start(1).unwrap();
+        let c = ck(11, 256);
+        send_checkpoint_tcp(server.addr(), &c).unwrap();
+        // wait for the server thread to park it
+        for _ in 0..100 {
+            if let Some(got) = server.take(11) {
+                assert_eq!(got, c);
+                server.join().unwrap();
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        panic!("checkpoint never arrived");
+    }
+
+    #[test]
+    fn tcp_multiple_devices() {
+        let server = TcpCheckpointServer::start(3).unwrap();
+        for d in 0..3u64 {
+            send_checkpoint_tcp(server.addr(), &ck(d, 128)).unwrap();
+        }
+        server.join().unwrap();
+    }
+}

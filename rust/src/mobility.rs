@@ -1,0 +1,320 @@
+//! Device mobility: when devices move between edge servers.
+//!
+//! The paper studies moves at fixed training-progress fractions (Fig 3:
+//! 50% and 90%), at every 10th round (Fig 4), and discusses move
+//! *frequency* as a factor (§III).  [`Schedule`] covers all three.
+
+use crate::util::Rng;
+
+/// One device move: at the *start* of `round`, `device` disconnects from
+/// its current edge and reconnects to `to_edge`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MoveEvent {
+    pub round: u64,
+    pub device: usize,
+    pub to_edge: usize,
+}
+
+/// An immutable, round-sorted mobility schedule.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Schedule {
+    events: Vec<MoveEvent>,
+}
+
+impl Schedule {
+    pub fn none() -> Self {
+        Schedule::default()
+    }
+
+    pub fn new(mut events: Vec<MoveEvent>) -> Self {
+        events.sort_by_key(|e| (e.round, e.device));
+        Schedule { events }
+    }
+
+    /// Paper Fig 3: `device` moves once, after `fraction` of the
+    /// `total_rounds`-round run (e.g. 0.5 or 0.9), to `to_edge`.
+    pub fn at_fraction(device: usize, fraction: f64, total_rounds: u64, to_edge: usize) -> Self {
+        assert!((0.0..=1.0).contains(&fraction));
+        let round = ((total_rounds as f64 * fraction).round() as u64).min(total_rounds - 1);
+        Schedule::new(vec![MoveEvent {
+            round,
+            device,
+            to_edge,
+        }])
+    }
+
+    /// Paper Fig 4: `device` ping-pongs between two edges every
+    /// `period` rounds (moves at rounds period, 2*period, ...).
+    pub fn periodic(
+        device: usize,
+        period: u64,
+        total_rounds: u64,
+        edges: (usize, usize),
+    ) -> Self {
+        assert!(period > 0);
+        let mut events = Vec::new();
+        let mut at_second = true; // first move goes to edges.1
+        let mut round = period;
+        while round < total_rounds {
+            events.push(MoveEvent {
+                round,
+                device,
+                to_edge: if at_second { edges.1 } else { edges.0 },
+            });
+            at_second = !at_second;
+            round += period;
+        }
+        Schedule::new(events)
+    }
+
+    /// Random trace: every device independently moves with probability
+    /// `p_move` per round, to a uniformly random other edge.
+    pub fn random_trace(
+        n_devices: usize,
+        n_edges: usize,
+        total_rounds: u64,
+        p_move: f64,
+        seed: u64,
+    ) -> Self {
+        assert!(n_edges >= 2);
+        let mut rng = Rng::new(seed ^ 0x0B17E);
+        let mut current: Vec<usize> = (0..n_devices).map(|d| d % n_edges).collect();
+        let mut events = Vec::new();
+        for round in 1..total_rounds {
+            for (device, cur) in current.iter_mut().enumerate() {
+                if rng.next_f64() < p_move {
+                    let mut to = rng.below(n_edges);
+                    while to == *cur {
+                        to = rng.below(n_edges);
+                    }
+                    events.push(MoveEvent {
+                        round,
+                        device,
+                        to_edge: to,
+                    });
+                    *cur = to;
+                }
+            }
+        }
+        Schedule::new(events)
+    }
+
+    pub fn events(&self) -> &[MoveEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Moves that fire at the start of `round`.
+    pub fn at_round(&self, round: u64) -> impl Iterator<Item = &MoveEvent> {
+        self.events.iter().filter(move |e| e.round == round)
+    }
+
+    /// Union of two schedules.
+    pub fn merge(&self, other: &Schedule) -> Schedule {
+        let mut all = self.events.clone();
+        all.extend_from_slice(&other.events);
+        Schedule::new(all)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Random-waypoint spatial model
+//
+// The paper assumes "the moving device knows when to disconnect" (§IV).
+// This model grounds that assumption: devices roam a unit square under the
+// classic random-waypoint model, edge servers sit at fixed positions, and
+// a device hands off (a MoveEvent fires) whenever its nearest edge server
+// changes between rounds — i.e. when it crosses a coverage boundary.
+
+/// Random-waypoint mobility simulation over a unit square.
+#[derive(Clone, Debug)]
+pub struct WaypointField {
+    /// Edge-server positions in [0,1]^2.
+    pub edge_positions: Vec<(f64, f64)>,
+    /// Device speed in field-units per round (e.g. 0.02 = crosses the
+    /// field in ~50 rounds).
+    pub speed_per_round: f64,
+}
+
+impl WaypointField {
+    /// Edges evenly spaced on the horizontal midline.
+    pub fn line(n_edges: usize, speed_per_round: f64) -> Self {
+        assert!(n_edges >= 1);
+        let edge_positions = (0..n_edges)
+            .map(|i| ((i as f64 + 0.5) / n_edges as f64, 0.5))
+            .collect();
+        WaypointField {
+            edge_positions,
+            speed_per_round,
+        }
+    }
+
+    fn nearest_edge(&self, p: (f64, f64)) -> usize {
+        let mut best = 0;
+        let mut best_d = f64::INFINITY;
+        for (i, &(x, y)) in self.edge_positions.iter().enumerate() {
+            let d = (p.0 - x).powi(2) + (p.1 - y).powi(2);
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Simulate `n_devices` walkers for `total_rounds` rounds; returns the
+    /// handoff schedule plus each device's initial edge assignment.
+    pub fn simulate(
+        &self,
+        n_devices: usize,
+        total_rounds: u64,
+        seed: u64,
+    ) -> (Schedule, Vec<usize>) {
+        let mut rng = Rng::new(seed ^ 0x3A3F1E1D);
+        let mut pos: Vec<(f64, f64)> = (0..n_devices)
+            .map(|_| (rng.next_f64(), rng.next_f64()))
+            .collect();
+        let mut target: Vec<(f64, f64)> = pos.clone();
+        let initial: Vec<usize> = pos.iter().map(|&p| self.nearest_edge(p)).collect();
+        let mut current = initial.clone();
+        let mut events = Vec::new();
+        for round in 1..total_rounds {
+            for d in 0..n_devices {
+                // pick a new waypoint when the old one is reached
+                let dx = target[d].0 - pos[d].0;
+                let dy = target[d].1 - pos[d].1;
+                let dist = (dx * dx + dy * dy).sqrt();
+                if dist < self.speed_per_round {
+                    pos[d] = target[d];
+                    target[d] = (rng.next_f64(), rng.next_f64());
+                } else {
+                    pos[d].0 += dx / dist * self.speed_per_round;
+                    pos[d].1 += dy / dist * self.speed_per_round;
+                }
+                let near = self.nearest_edge(pos[d]);
+                if near != current[d] {
+                    events.push(MoveEvent {
+                        round,
+                        device: d,
+                        to_edge: near,
+                    });
+                    current[d] = near;
+                }
+            }
+        }
+        (Schedule::new(events), initial)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at_fraction_rounds_correctly() {
+        let s = Schedule::at_fraction(0, 0.5, 100, 1);
+        assert_eq!(s.events(), &[MoveEvent { round: 50, device: 0, to_edge: 1 }]);
+        let s = Schedule::at_fraction(2, 0.9, 100, 1);
+        assert_eq!(s.events()[0].round, 90);
+        // fraction 1.0 clamps inside the run
+        let s = Schedule::at_fraction(0, 1.0, 100, 1);
+        assert_eq!(s.events()[0].round, 99);
+    }
+
+    #[test]
+    fn periodic_matches_fig4() {
+        // Fig 4: moves at rounds 10, 20, ..., 90 in a 100-round run.
+        let s = Schedule::periodic(1, 10, 100, (0, 1));
+        let rounds: Vec<u64> = s.events().iter().map(|e| e.round).collect();
+        assert_eq!(rounds, vec![10, 20, 30, 40, 50, 60, 70, 80, 90]);
+        // ping-pong: alternates destination, starting with edge 1
+        assert_eq!(s.events()[0].to_edge, 1);
+        assert_eq!(s.events()[1].to_edge, 0);
+        assert_eq!(s.events()[8].to_edge, 1);
+    }
+
+    #[test]
+    fn at_round_filters() {
+        let s = Schedule::periodic(0, 10, 40, (0, 1));
+        assert_eq!(s.at_round(10).count(), 1);
+        assert_eq!(s.at_round(11).count(), 0);
+    }
+
+    #[test]
+    fn merge_sorts() {
+        let a = Schedule::at_fraction(0, 0.9, 100, 1);
+        let b = Schedule::at_fraction(1, 0.5, 100, 1);
+        let m = a.merge(&b);
+        assert_eq!(m.len(), 2);
+        assert!(m.events()[0].round <= m.events()[1].round);
+    }
+
+    #[test]
+    fn prop_random_trace_invariants() {
+        use crate::util::prop::forall;
+        forall(30, |r| {
+            let n_dev = 1 + r.below(6);
+            let n_edges = 2 + r.below(3);
+            let rounds = 10 + r.below(100) as u64;
+            let s = Schedule::random_trace(n_dev, n_edges, rounds, 0.2, r.next_u64());
+            let mut cur: Vec<usize> = (0..n_dev).map(|d| d % n_edges).collect();
+            let mut last_round = 0;
+            for e in s.events() {
+                assert!(e.round >= last_round, "sorted");
+                last_round = e.round;
+                assert!(e.round < rounds);
+                assert!(e.device < n_dev);
+                assert!(e.to_edge < n_edges);
+                assert_ne!(e.to_edge, cur[e.device], "no self-move");
+                cur[e.device] = e.to_edge;
+            }
+        });
+    }
+
+    #[test]
+    fn random_trace_is_deterministic() {
+        let a = Schedule::random_trace(4, 2, 50, 0.1, 7);
+        let b = Schedule::random_trace(4, 2, 50, 0.1, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn waypoint_no_self_moves_and_valid_edges() {
+        let field = WaypointField::line(2, 0.05);
+        let (sched, initial) = field.simulate(4, 200, 11);
+        let mut cur = initial.clone();
+        for e in sched.events() {
+            assert!(e.to_edge < 2);
+            assert_ne!(e.to_edge, cur[e.device], "self-move at round {}", e.round);
+            cur[e.device] = e.to_edge;
+        }
+    }
+
+    #[test]
+    fn waypoint_fast_walkers_hand_off_more() {
+        let slow = WaypointField::line(2, 0.005).simulate(4, 200, 3).0.len();
+        let fast = WaypointField::line(2, 0.08).simulate(4, 200, 3).0.len();
+        assert!(fast > slow, "fast {fast} <= slow {slow}");
+    }
+
+    #[test]
+    fn waypoint_is_deterministic() {
+        let f = WaypointField::line(3, 0.03);
+        assert_eq!(f.simulate(5, 100, 42).0, f.simulate(5, 100, 42).0);
+    }
+
+    #[test]
+    fn waypoint_initial_assignment_matches_geometry() {
+        let f = WaypointField::line(2, 0.02);
+        // edge 0 at x=0.25, edge 1 at x=0.75
+        assert_eq!(f.nearest_edge((0.1, 0.5)), 0);
+        assert_eq!(f.nearest_edge((0.9, 0.5)), 1);
+    }
+}

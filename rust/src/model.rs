@@ -1,0 +1,181 @@
+//! VGG-5 model metadata: a typed view over the manifest plus the canonical
+//! parameter initialization (He-normal) the coordinator distributes in
+//! Step 1 of the FedFly protocol.
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::manifest::Manifest;
+use crate::util::Rng;
+
+/// Backward pass costs roughly 2x the forward FLOPs (grad-input +
+/// grad-weight), the standard training-cost model.
+pub const BWD_FLOP_FACTOR: f64 = 2.0;
+
+/// Typed model view shared across the coordinator.
+#[derive(Clone)]
+pub struct ModelMeta {
+    pub manifest: Arc<Manifest>,
+}
+
+impl ModelMeta {
+    pub fn new(manifest: Arc<Manifest>) -> Self {
+        ModelMeta { manifest }
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.manifest.total_params
+    }
+
+    pub fn device_params(&self, sp: usize) -> Result<usize> {
+        Ok(self.manifest.split(sp)?.device_params)
+    }
+
+    pub fn server_params(&self, sp: usize) -> Result<usize> {
+        Ok(self.manifest.split(sp)?.server_params)
+    }
+
+    // ---- artifact names --------------------------------------------------
+
+    pub fn device_fwd_name(&self, sp: usize, batch: usize) -> String {
+        format!("device_fwd_sp{sp}_b{batch}")
+    }
+
+    pub fn server_step_name(&self, sp: usize, batch: usize) -> String {
+        format!("server_step_sp{sp}_b{batch}")
+    }
+
+    pub fn device_bwd_name(&self, sp: usize, batch: usize) -> String {
+        format!("device_bwd_sp{sp}_b{batch}")
+    }
+
+    pub fn full_eval_name(&self, batch: usize) -> String {
+        format!("full_eval_b{batch}")
+    }
+
+    pub fn full_step_name(&self, batch: usize) -> String {
+        format!("full_step_b{batch}")
+    }
+
+    // ---- cost model (feeds timesim) ---------------------------------------
+
+    /// Device-side FLOPs for one *training* pass over one image:
+    /// forward + recomputed forward + backward ≈ (1 + 1 + 2) × fwd.
+    /// (device_bwd artifacts recompute the forward internally.)
+    pub fn device_train_flops_per_image(&self, sp: usize) -> Result<f64> {
+        let f = self.manifest.split(sp)?.device_fwd_flops_per_image;
+        Ok(f * (2.0 + BWD_FLOP_FACTOR))
+    }
+
+    /// Server-side FLOPs for one training pass over one image.
+    pub fn server_train_flops_per_image(&self, sp: usize) -> Result<f64> {
+        let f = self.manifest.split(sp)?.server_fwd_flops_per_image;
+        Ok(f * (1.0 + BWD_FLOP_FACTOR))
+    }
+
+    /// Bytes of the smashed activation for a batch (f32).
+    pub fn smashed_bytes(&self, sp: usize, batch: usize) -> Result<usize> {
+        Ok(self.manifest.smashed_elems(sp, batch)? * 4)
+    }
+
+    /// Bytes of a FedFly checkpoint for split `sp`: server-side weights +
+    /// momentum + last smashed-gradient + header (paper §IV: epoch number,
+    /// gradients, model weights, loss, optimizer state).
+    pub fn checkpoint_bytes(&self, sp: usize, batch: usize) -> Result<usize> {
+        let s = self.manifest.split(sp)?;
+        Ok(s.server_params * 4 * 2 + self.smashed_bytes(sp, batch)? + 256)
+    }
+
+    // ---- init -------------------------------------------------------------
+
+    /// He-normal init of the full flat parameter vector (biases zero).
+    /// Deterministic in `seed`; the central server runs this once and
+    /// distributes the result (FedFly Step 1).
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed ^ 0x5EED_1A1A);
+        let mut out = vec![0.0f32; self.manifest.total_params];
+        for p in &self.manifest.params {
+            if p.name.ends_with("_b") {
+                continue; // biases stay zero
+            }
+            // fan_in = product of all dims but the last (HWIO convs, (in,out) fcs)
+            let fan_in: usize = p.shape[..p.shape.len() - 1].iter().product();
+            let std = (2.0 / fan_in as f64).sqrt();
+            for x in &mut out[p.offset..p.offset + p.len] {
+                *x = (rng.gaussian() * std) as f32;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn meta() -> Option<ModelMeta> {
+        Manifest::load_default()
+            .ok()
+            .map(|m| ModelMeta::new(Arc::new(m)))
+    }
+
+    #[test]
+    fn artifact_names() {
+        let Some(m) = meta() else { return };
+        assert_eq!(m.device_fwd_name(2, 100), "device_fwd_sp2_b100");
+        assert_eq!(m.server_step_name(1, 16), "server_step_sp1_b16");
+        assert_eq!(m.full_eval_name(100), "full_eval_b100");
+        let _ = PathBuf::from("/tmp"); // keep import used
+    }
+
+    #[test]
+    fn init_is_deterministic_and_nontrivial() {
+        let Some(m) = meta() else { return };
+        let a = m.init_params(1);
+        let b = m.init_params(1);
+        let c = m.init_params(2);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 582026);
+        // biases (e.g. conv1_b at 864..896) are zero
+        assert!(a[864..896].iter().all(|&x| x == 0.0));
+        // weights are not
+        assert!(a[..864].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn init_std_matches_he() {
+        let Some(m) = meta() else { return };
+        let p = m.init_params(7);
+        // fc1_w: fan_in 4096 -> std ~ sqrt(2/4096) ~ 0.0221
+        let e = m
+            .manifest
+            .params
+            .iter()
+            .find(|e| e.name == "fc1_w")
+            .unwrap()
+            .clone();
+        let w = &p[e.offset..e.offset + e.len];
+        let mean: f64 = w.iter().map(|&x| x as f64).sum::<f64>() / w.len() as f64;
+        let var: f64 =
+            w.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / w.len() as f64;
+        let expected = 2.0 / 4096.0;
+        assert!((var - expected).abs() / expected < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn flop_and_byte_model() {
+        let Some(m) = meta() else { return };
+        // SP2 smashed = 8*8*64 f32 = 16384 bytes/image
+        assert_eq!(m.smashed_bytes(2, 100).unwrap(), 100 * 8 * 8 * 64 * 4);
+        // deeper split => more device flops
+        let f1 = m.device_train_flops_per_image(1).unwrap();
+        let f2 = m.device_train_flops_per_image(2).unwrap();
+        let f3 = m.device_train_flops_per_image(3).unwrap();
+        assert!(f1 < f2 && f2 < f3);
+        // checkpoint fits "2.25 MB x2 + smashed" ballpark at SP2
+        let ck = m.checkpoint_bytes(2, 100).unwrap();
+        assert!(ck > 4_000_000 && ck < 8_000_000, "ck {ck}");
+    }
+}

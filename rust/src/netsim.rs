@@ -1,0 +1,124 @@
+//! Testbed network model.
+//!
+//! The paper's lab testbed connects four Raspberry Pis, two edge servers
+//! and a central server over Wi-Fi with ~75 Mbps average available
+//! bandwidth (§V-A).  We run on localhost sockets, so wire time is
+//! accounted analytically from the published link characteristics: the
+//! *protocol and payloads are real*, only the clock is rescaled (see
+//! DESIGN.md §Substitutions).
+
+/// One directional link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Link {
+    /// Usable bandwidth in megabits/second.
+    pub bandwidth_mbps: f64,
+    /// One-way latency in milliseconds.
+    pub latency_ms: f64,
+}
+
+impl Link {
+    pub const fn new(bandwidth_mbps: f64, latency_ms: f64) -> Self {
+        Link {
+            bandwidth_mbps,
+            latency_ms,
+        }
+    }
+
+    /// Seconds to move `bytes` over this link (latency + serialization).
+    pub fn transfer_time(&self, bytes: usize) -> f64 {
+        self.latency_ms / 1000.0 + (bytes as f64 * 8.0) / (self.bandwidth_mbps * 1e6)
+    }
+}
+
+/// The hierarchical topology's three link classes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NetModel {
+    /// Device <-> edge server (Wi-Fi, paper: 75 Mbps average).
+    pub device_edge: Link,
+    /// Edge server <-> edge server (checkpoint migration path).
+    pub edge_edge: Link,
+    /// Edge server <-> central server (model distribution/aggregation).
+    pub edge_cloud: Link,
+}
+
+impl Default for NetModel {
+    fn default() -> Self {
+        NetModel {
+            device_edge: Link::new(75.0, 2.0),
+            edge_edge: Link::new(75.0, 2.0),
+            edge_cloud: Link::new(100.0, 10.0),
+        }
+    }
+}
+
+impl NetModel {
+    /// Smashed-activation uplink + gradient downlink for one batch.
+    pub fn batch_exchange_time(&self, smashed_bytes: usize) -> f64 {
+        // uplink (smashed) + downlink (same-shaped gradient)
+        2.0 * self.device_edge.transfer_time(smashed_bytes)
+    }
+
+    /// Checkpoint migration between edge servers (FedFly Step 8).
+    pub fn migration_time(&self, checkpoint_bytes: usize) -> f64 {
+        self.edge_edge.transfer_time(checkpoint_bytes)
+    }
+
+    /// Device-relayed migration (paper §IV last ¶: edges that cannot talk
+    /// to each other route the checkpoint through the moving device).
+    pub fn migration_time_via_device(&self, checkpoint_bytes: usize) -> f64 {
+        2.0 * self.device_edge.transfer_time(checkpoint_bytes)
+    }
+
+    /// Global model down/up for one round (params to device + updates back).
+    pub fn model_sync_time(&self, param_bytes: usize) -> f64 {
+        self.edge_cloud.transfer_time(param_bytes) + self.device_edge.transfer_time(param_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_scales_linearly() {
+        let l = Link::new(75.0, 0.0);
+        let t1 = l.transfer_time(1_000_000);
+        let t2 = l.transfer_time(2_000_000);
+        assert!((t2 / t1 - 2.0).abs() < 1e-9);
+        // 1 MB at 75 Mbps ~ 0.1067 s
+        assert!((t1 - 8e6 / 75e6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_floor() {
+        let l = Link::new(75.0, 2.0);
+        assert!(l.transfer_time(0) == 0.002);
+    }
+
+    #[test]
+    fn paper_overhead_claim_shape() {
+        // A VGG-5 SP2 checkpoint (~4.7 MB) over the 75 Mbps edge-edge link
+        // must land under the paper's "up to two seconds" (§V-B).
+        let net = NetModel::default();
+        let t = net.migration_time(4_700_000);
+        assert!(t > 0.1 && t < 2.0, "migration {t} s");
+    }
+
+    #[test]
+    fn device_relay_is_slower_than_direct() {
+        let net = NetModel::default();
+        assert!(net.migration_time_via_device(1 << 20) > net.migration_time(1 << 20));
+    }
+
+    #[test]
+    fn prop_transfer_monotone_in_bytes() {
+        use crate::util::prop::forall;
+        use crate::util::Rng;
+        forall(100, |r: &mut Rng| {
+            let l = Link::new(1.0 + r.next_f64() * 999.0, r.next_f64() * 50.0);
+            let a = r.below(1 << 26);
+            let b = a + r.below(1 << 20);
+            assert!(l.transfer_time(b) >= l.transfer_time(a));
+        });
+    }
+}

@@ -1,0 +1,181 @@
+//! Adaptive split-point selection (the FedAdapt-style offloading
+//! controller the paper cites as its companion system [13] and leaves as
+//! the "neural network optimization" future-work direction).
+//!
+//! Given a device's compute profile, its edge server's profile, and the
+//! network model, pick the split point that minimizes the per-batch
+//! pipeline time.  The coordinator can re-run the controller after a
+//! migration: the destination edge may be slower or faster than the
+//! source, moving the optimum (the paper's §VI "the destination edge
+//! server resource is not equivalent to the source edge server").
+//!
+//! NOTE: re-splitting *mid-run* would change the device/server parameter
+//! partition, which today is fixed per run (the artifacts are
+//! shape-specialized per SP).  The controller is therefore used (a) at
+//! run start, and (b) as an advisory "re-split would save X s/round"
+//! signal after migration — both exercised in `bench_ablations`.
+
+use crate::model::ModelMeta;
+use crate::netsim::NetModel;
+use crate::timesim::{ComputeProfile, PairTimeModel};
+
+/// The controller's assessment of one split point.
+#[derive(Clone, Copy, Debug)]
+pub struct SplitAssessment {
+    pub sp: usize,
+    /// Predicted per-batch pipeline time (s).
+    pub batch_time_s: f64,
+    /// Device share of the pipeline (0..1) — high means compute-bound
+    /// device, low means the device mostly waits on network/server.
+    pub device_share: f64,
+    /// Smashed-activation bytes per batch (uplink payload).
+    pub smashed_bytes: usize,
+}
+
+/// Evaluate every split point for a (device, edge, net) triple.
+pub fn assess(
+    meta: &ModelMeta,
+    device: ComputeProfile,
+    edge: ComputeProfile,
+    net: NetModel,
+    batch: usize,
+) -> Vec<SplitAssessment> {
+    let pair = PairTimeModel { device, edge, net };
+    meta.manifest
+        .splits
+        .keys()
+        .map(|&sp| {
+            let bt = pair.batch_time(meta, sp, batch);
+            let dev = bt.device_fwd + bt.device_bwd;
+            SplitAssessment {
+                sp,
+                batch_time_s: bt.total(),
+                device_share: dev / bt.total(),
+                smashed_bytes: meta.smashed_bytes(sp, batch).unwrap_or(0),
+            }
+        })
+        .collect()
+}
+
+/// Pick the fastest split point.
+pub fn best_split(
+    meta: &ModelMeta,
+    device: ComputeProfile,
+    edge: ComputeProfile,
+    net: NetModel,
+    batch: usize,
+) -> SplitAssessment {
+    assess(meta, device, edge, net, batch)
+        .into_iter()
+        .min_by(|a, b| a.batch_time_s.partial_cmp(&b.batch_time_s).unwrap())
+        .expect("manifest has split points")
+}
+
+/// Advisory signal after a migration: how much a re-split would save per
+/// batch at the destination edge, in seconds (0 if the current SP is
+/// already optimal).
+pub fn resplit_gain(
+    meta: &ModelMeta,
+    current_sp: usize,
+    device: ComputeProfile,
+    dest_edge: ComputeProfile,
+    net: NetModel,
+    batch: usize,
+) -> f64 {
+    let all = assess(meta, device, dest_edge, net, batch);
+    let current = all
+        .iter()
+        .find(|a| a.sp == current_sp)
+        .map(|a| a.batch_time_s)
+        .unwrap_or(f64::INFINITY);
+    let best = all
+        .iter()
+        .map(|a| a.batch_time_s)
+        .fold(f64::INFINITY, f64::min);
+    (current - best).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+    use crate::timesim::profiles;
+    use std::sync::Arc;
+
+    fn meta() -> Option<ModelMeta> {
+        Manifest::load_default()
+            .ok()
+            .map(|m| ModelMeta::new(Arc::new(m)))
+    }
+
+    #[test]
+    fn assesses_all_split_points() {
+        let Some(m) = meta() else { return };
+        let a = assess(&m, profiles::PI3, profiles::EDGE_I5, NetModel::default(), 100);
+        assert_eq!(a.len(), 3);
+        assert!(a.iter().all(|x| x.batch_time_s > 0.0));
+        assert!(a.iter().all(|x| (0.0..=1.0).contains(&x.device_share)));
+    }
+
+    #[test]
+    fn slow_device_prefers_shallow_split() {
+        // A Pi3 against a fast edge should offload as much as possible
+        // (SP1 = only one conv block on the device).
+        let Some(m) = meta() else { return };
+        let best = best_split(&m, profiles::PI3, profiles::EDGE_I7, NetModel::default(), 100);
+        assert_eq!(best.sp, 1, "{best:?}");
+    }
+
+    #[test]
+    fn starved_network_prefers_smaller_smashed_payload() {
+        // With a crawling uplink, the 4x-smaller SP2/SP3 smashed tensor
+        // beats SP1 despite the extra device compute.
+        let Some(m) = meta() else { return };
+        let slow_net = NetModel {
+            device_edge: crate::netsim::Link::new(2.0, 5.0), // 2 Mbps
+            ..NetModel::default()
+        };
+        let best = best_split(&m, profiles::PI4, profiles::EDGE_I7, slow_net, 100);
+        assert!(best.sp >= 2, "{best:?}");
+    }
+
+    #[test]
+    fn resplit_gain_zero_when_optimal() {
+        let Some(m) = meta() else { return };
+        let net = NetModel::default();
+        let best = best_split(&m, profiles::PI3, profiles::EDGE_I5, net, 100);
+        let gain = resplit_gain(&m, best.sp, profiles::PI3, profiles::EDGE_I5, net, 100);
+        assert_eq!(gain, 0.0);
+    }
+
+    #[test]
+    fn resplit_gain_positive_when_suboptimal() {
+        let Some(m) = meta() else { return };
+        let net = NetModel::default();
+        let best = best_split(&m, profiles::PI3, profiles::EDGE_I5, net, 100);
+        let worst_sp = (1..=3).find(|&sp| sp != best.sp).unwrap();
+        let gain = resplit_gain(&m, worst_sp, profiles::PI3, profiles::EDGE_I5, net, 100);
+        assert!(gain > 0.0);
+    }
+
+    #[test]
+    fn prop_best_is_min_over_assessments() {
+        let Some(m) = meta() else { return };
+        use crate::util::prop::forall;
+        forall(25, |r| {
+            let dev = ComputeProfile {
+                name: "x",
+                effective_gflops: 0.2 + r.next_f64() * 10.0,
+            };
+            let edge = ComputeProfile {
+                name: "y",
+                effective_gflops: 5.0 + r.next_f64() * 40.0,
+            };
+            let net = NetModel::default();
+            let best = best_split(&m, dev, edge, net, 100);
+            for a in assess(&m, dev, edge, net, 100) {
+                assert!(best.batch_time_s <= a.batch_time_s + 1e-12);
+            }
+        });
+    }
+}

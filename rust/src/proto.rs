@@ -1,0 +1,361 @@
+//! Wire protocol for the distributed (multi-process / multi-thread over
+//! TCP) deployment: length-prefixed, CRC-checked frames carrying the FL
+//! control plane and the split-learning data plane.
+//!
+//! Frame layout:
+//!
+//! ```text
+//!   magic  u32  = 0x46444C59 ("FDLY")
+//!   tag    u32  message discriminant
+//!   len    u64  payload byte count
+//!   crc    u32  crc32 of payload
+//!   payload[len]
+//! ```
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+use crate::util::bytes::{put_f32_slice, put_str, put_u32, put_u64, Reader};
+
+const MAGIC: u32 = 0x4644_4C59;
+
+/// Maximum accepted payload (64 MiB) — a corrupt length field must not OOM.
+pub const MAX_PAYLOAD: u64 = 64 << 20;
+
+/// Control- and data-plane messages of the FedFly protocol (paper Fig 2).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Peer introduction: role ("device"/"edge"/"central") and id.
+    Hello { role: String, id: u64 },
+    /// Central -> edge -> device: global parameters for a round (Step 1/6).
+    GlobalParams { round: u64, params: Vec<f32> },
+    /// Device -> edge -> central: weighted local update (Step 4).
+    LocalUpdate {
+        device: u64,
+        weight: f64,
+        params: Vec<f32>,
+    },
+    /// Device -> edge: smashed activations + labels for one batch (Step 2).
+    Smashed {
+        device: u64,
+        data: Vec<f32>,
+        labels: Vec<f32>,
+    },
+    /// Edge -> device: gradient of the smashed activation + loss (Step 3).
+    SmashedGrad {
+        device: u64,
+        data: Vec<f32>,
+        loss: f32,
+    },
+    /// Device -> source edge: about to move to `dest_edge` (Step 6').
+    MoveNotice { device: u64, dest_edge: u64 },
+    /// Edge -> edge: the serialized migration checkpoint (Step 8).
+    CheckpointTransfer { device: u64, blob: Vec<u8> },
+    /// Device -> edge after reconnect: resume training (Step 9).
+    Resume { device: u64 },
+    /// Generic acknowledgement.
+    Ack { code: u32 },
+    /// Orderly shutdown.
+    Bye,
+}
+
+impl Msg {
+    fn tag(&self) -> u32 {
+        match self {
+            Msg::Hello { .. } => 1,
+            Msg::GlobalParams { .. } => 2,
+            Msg::LocalUpdate { .. } => 3,
+            Msg::Smashed { .. } => 4,
+            Msg::SmashedGrad { .. } => 5,
+            Msg::MoveNotice { .. } => 6,
+            Msg::CheckpointTransfer { .. } => 7,
+            Msg::Resume { .. } => 8,
+            Msg::Ack { .. } => 9,
+            Msg::Bye => 10,
+        }
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        match self {
+            Msg::Hello { role, id } => {
+                put_str(&mut b, role);
+                put_u64(&mut b, *id);
+            }
+            Msg::GlobalParams { round, params } => {
+                put_u64(&mut b, *round);
+                put_f32_slice(&mut b, params);
+            }
+            Msg::LocalUpdate {
+                device,
+                weight,
+                params,
+            } => {
+                put_u64(&mut b, *device);
+                put_u64(&mut b, weight.to_bits());
+                put_f32_slice(&mut b, params);
+            }
+            Msg::Smashed {
+                device,
+                data,
+                labels,
+            } => {
+                put_u64(&mut b, *device);
+                put_f32_slice(&mut b, data);
+                put_f32_slice(&mut b, labels);
+            }
+            Msg::SmashedGrad { device, data, loss } => {
+                put_u64(&mut b, *device);
+                put_f32_slice(&mut b, data);
+                b.extend_from_slice(&loss.to_le_bytes());
+            }
+            Msg::MoveNotice { device, dest_edge } => {
+                put_u64(&mut b, *device);
+                put_u64(&mut b, *dest_edge);
+            }
+            Msg::CheckpointTransfer { device, blob } => {
+                put_u64(&mut b, *device);
+                put_u64(&mut b, blob.len() as u64);
+                b.extend_from_slice(blob);
+            }
+            Msg::Resume { device } => put_u64(&mut b, *device),
+            Msg::Ack { code } => put_u32(&mut b, *code),
+            Msg::Bye => {}
+        }
+        b
+    }
+
+    fn decode(tag: u32, payload: &[u8]) -> Result<Msg> {
+        let mut r = Reader::new(payload);
+        let perr = |e: String| Error::Proto(e);
+        let msg = match tag {
+            1 => Msg::Hello {
+                role: r.string().map_err(perr)?,
+                id: r.u64().map_err(perr)?,
+            },
+            2 => Msg::GlobalParams {
+                round: r.u64().map_err(perr)?,
+                params: r.f32_vec().map_err(perr)?,
+            },
+            3 => Msg::LocalUpdate {
+                device: r.u64().map_err(perr)?,
+                weight: f64::from_bits(r.u64().map_err(perr)?),
+                params: r.f32_vec().map_err(perr)?,
+            },
+            4 => Msg::Smashed {
+                device: r.u64().map_err(perr)?,
+                data: r.f32_vec().map_err(perr)?,
+                labels: r.f32_vec().map_err(perr)?,
+            },
+            5 => Msg::SmashedGrad {
+                device: r.u64().map_err(perr)?,
+                data: r.f32_vec().map_err(perr)?,
+                loss: r.f32().map_err(perr)?,
+            },
+            6 => Msg::MoveNotice {
+                device: r.u64().map_err(perr)?,
+                dest_edge: r.u64().map_err(perr)?,
+            },
+            7 => {
+                let device = r.u64().map_err(perr)?;
+                let n = r.u64().map_err(perr)? as usize;
+                if n > r.remaining() {
+                    return Err(Error::Proto("checkpoint blob overruns frame".into()));
+                }
+                let mut blob = vec![0u8; n];
+                let start = r.pos();
+                blob.copy_from_slice(&payload[start..start + n]);
+                Msg::CheckpointTransfer { device, blob }
+            }
+            8 => Msg::Resume {
+                device: r.u64().map_err(perr)?,
+            },
+            9 => Msg::Ack {
+                code: r.u32().map_err(perr)?,
+            },
+            10 => Msg::Bye,
+            t => return Err(Error::Proto(format!("unknown tag {t}"))),
+        };
+        Ok(msg)
+    }
+}
+
+/// Write one frame.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<()> {
+    let payload = msg.payload();
+    let mut head = Vec::with_capacity(20);
+    put_u32(&mut head, MAGIC);
+    put_u32(&mut head, msg.tag());
+    put_u64(&mut head, payload.len() as u64);
+    put_u32(&mut head, crc32fast::hash(&payload));
+    w.write_all(&head)?;
+    w.write_all(&payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg> {
+    let mut head = [0u8; 20];
+    r.read_exact(&mut head)?;
+    let mut h = Reader::new(&head);
+    let magic = h.u32().map_err(Error::Proto)?;
+    if magic != MAGIC {
+        return Err(Error::Proto(format!("bad magic {magic:#x}")));
+    }
+    let tag = h.u32().map_err(Error::Proto)?;
+    let len = h.u64().map_err(Error::Proto)?;
+    if len > MAX_PAYLOAD {
+        return Err(Error::Proto(format!("payload {len} exceeds cap")));
+    }
+    let crc = h.u32().map_err(Error::Proto)?;
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    if crc32fast::hash(&payload) != crc {
+        return Err(Error::Proto("payload crc mismatch".into()));
+    }
+    Msg::decode(tag, &payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        let out = read_msg(&mut buf.as_slice()).unwrap();
+        assert_eq!(msg, out);
+    }
+
+    #[test]
+    fn all_variants_roundtrip() {
+        roundtrip(Msg::Hello {
+            role: "device".into(),
+            id: 3,
+        });
+        roundtrip(Msg::GlobalParams {
+            round: 17,
+            params: vec![1.0, -2.0, 3.5],
+        });
+        roundtrip(Msg::LocalUpdate {
+            device: 1,
+            weight: 0.25,
+            params: vec![0.0; 100],
+        });
+        roundtrip(Msg::Smashed {
+            device: 2,
+            data: vec![1.5; 64],
+            labels: vec![0.0, 1.0, 2.0],
+        });
+        roundtrip(Msg::SmashedGrad {
+            device: 2,
+            data: vec![-1.0; 64],
+            loss: 2.3,
+        });
+        roundtrip(Msg::MoveNotice {
+            device: 0,
+            dest_edge: 1,
+        });
+        roundtrip(Msg::CheckpointTransfer {
+            device: 0,
+            blob: (0..=255).collect(),
+        });
+        roundtrip(Msg::Resume { device: 9 });
+        roundtrip(Msg::Ack { code: 0 });
+        roundtrip(Msg::Bye);
+    }
+
+    #[test]
+    fn corrupt_payload_detected() {
+        let mut buf = Vec::new();
+        write_msg(
+            &mut buf,
+            &Msg::GlobalParams {
+                round: 1,
+                params: vec![1.0, 2.0],
+            },
+        )
+        .unwrap();
+        let n = buf.len();
+        buf[n - 1] ^= 0xFF; // flip a payload byte
+        assert!(matches!(read_msg(&mut buf.as_slice()), Err(Error::Proto(_))));
+    }
+
+    #[test]
+    fn bad_magic_detected() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &Msg::Bye).unwrap();
+        buf[0] = 0;
+        assert!(read_msg(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn oversized_length_rejected_without_allocation() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, MAGIC);
+        put_u32(&mut buf, 10);
+        put_u64(&mut buf, u64::MAX); // absurd length
+        put_u32(&mut buf, 0);
+        assert!(read_msg(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_is_io_error() {
+        let mut buf = Vec::new();
+        write_msg(
+            &mut buf,
+            &Msg::GlobalParams {
+                round: 1,
+                params: vec![1.0; 100],
+            },
+        )
+        .unwrap();
+        buf.truncate(buf.len() - 10);
+        assert!(matches!(read_msg(&mut buf.as_slice()), Err(Error::Io(_))));
+    }
+
+    #[test]
+    fn prop_random_frames_roundtrip() {
+        use crate::util::prop::forall;
+        forall(50, |r| {
+            let n = r.below(2048);
+            let params: Vec<f32> = (0..n).map(|_| r.gaussian() as f32).collect();
+            roundtrip(Msg::GlobalParams {
+                round: r.next_u64(),
+                params,
+            });
+        });
+    }
+
+    #[test]
+    fn works_over_real_tcp() {
+        use std::net::{TcpListener, TcpStream};
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let msg = read_msg(&mut s).unwrap();
+            write_msg(&mut s, &Msg::Ack { code: 7 }).unwrap();
+            msg
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        write_msg(
+            &mut c,
+            &Msg::Hello {
+                role: "device".into(),
+                id: 42,
+            },
+        )
+        .unwrap();
+        let ack = read_msg(&mut c).unwrap();
+        assert_eq!(ack, Msg::Ack { code: 7 });
+        assert_eq!(
+            t.join().unwrap(),
+            Msg::Hello {
+                role: "device".into(),
+                id: 42
+            }
+        );
+    }
+}

@@ -1,0 +1,95 @@
+//! Host `Vec<f32>`/`Vec<i32>` <-> `xla::Literal` marshalling.
+
+use crate::error::Result;
+
+/// A borrowed host tensor heading into PJRT.
+pub enum HostTensor<'a> {
+    F32 { data: &'a [f32], shape: Vec<usize> },
+    I32 { data: &'a [i32], shape: Vec<usize> },
+}
+
+impl<'a> HostTensor<'a> {
+    pub fn f32(data: &'a [f32], shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::F32 { data, shape }
+    }
+
+    pub fn i32(data: &'a [i32], shape: Vec<usize>) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32 { data, shape }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } => shape,
+            HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            HostTensor::F32 { data, shape } => host_to_literal_f32(data, shape),
+            HostTensor::I32 { data, shape } => host_to_literal_i32(data, shape),
+        }
+    }
+}
+
+/// Build an f32 literal of the given shape from a host slice.
+pub fn host_to_literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Build an i32 (S32) literal of the given shape from a host slice.
+pub fn host_to_literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Copy a literal's f32 payload to the host (scalars -> length-1 vec).
+pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_literal_roundtrip() {
+        let data = vec![1.0f32, -2.5, 3.25, 0.0, f32::MIN_POSITIVE, 7.0];
+        let lit = host_to_literal_f32(&data, &[2, 3]).unwrap();
+        let back = literal_to_f32(&lit).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let lit = host_to_literal_f32(&[42.0], &[]).unwrap();
+        assert_eq!(literal_to_f32(&lit).unwrap(), vec![42.0]);
+    }
+
+    #[test]
+    fn i32_literal_builds() {
+        let data = vec![0i32, 5, 9, -1];
+        let lit = host_to_literal_i32(&data, &[4]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn host_tensor_shape_accessor() {
+        let d = [0.0f32; 6];
+        let t = HostTensor::f32(&d, vec![2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+    }
+}

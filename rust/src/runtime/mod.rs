@@ -1,0 +1,200 @@
+//! PJRT runtime: load AOT artifacts, compile once, execute many.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client).  Artifacts are HLO
+//! *text* (see `python/compile/aot.py` for why not serialized protos);
+//! every program was lowered with `return_tuple=True`, so execution
+//! returns a single tuple literal that we destructure into flat f32 (or
+//! scalar) host vectors.
+//!
+//! The engine is the only place where model bytes cross the host/PJRT
+//! boundary; everything above it (split engine, coordinator) works with
+//! plain `Vec<f32>`.
+
+pub mod literal;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::manifest::Manifest;
+
+pub use literal::{host_to_literal_f32, host_to_literal_i32, literal_to_f32, HostTensor};
+
+/// Engine statistics (perf pass instrumentation).
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub exec_seconds: f64,
+}
+
+/// A PJRT client plus a lazily-populated executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: std::sync::Arc<Manifest>,
+    executables: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<EngineStats>,
+}
+
+impl Engine {
+    /// CPU-PJRT engine over the given manifest.
+    pub fn new(manifest: std::sync::Arc<Manifest>) -> Result<Self> {
+        Ok(Engine {
+            client: xla::PjRtClient::cpu()?,
+            manifest,
+            executables: Mutex::new(HashMap::new()),
+            stats: Mutex::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Get (compiling on first use) the executable for an artifact.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.executables.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        // Compile outside the lock: first-touch compiles of different
+        // artifacts can proceed in parallel.
+        let path = self.manifest.artifact_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        let mut cache = self.executables.lock().unwrap();
+        let entry = cache.entry(name.to_string()).or_insert_with(|| {
+            self.stats.lock().unwrap().compiles += 1;
+            exe
+        });
+        Ok(entry.clone())
+    }
+
+    /// Eagerly compile a set of artifacts (warm-up before the timed path).
+    pub fn warm_up(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with host inputs; returns one flat f32 vector
+    /// per tuple element (scalars become length-1 vectors).
+    ///
+    /// Input shapes are validated against the manifest before launch so a
+    /// topology bug fails with a readable error instead of an XLA abort.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor<'_>]) -> Result<Vec<Vec<f32>>> {
+        let info = self.manifest.artifact(name)?;
+        if inputs.len() != info.inputs.len() {
+            return Err(Error::other(format!(
+                "{name}: expected {} inputs, got {}",
+                info.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, t) in inputs.iter().enumerate() {
+            let expected = &info.inputs[i];
+            if t.shape() != expected.as_slice() {
+                return Err(Error::Shape {
+                    expected: expected.clone(),
+                    got: t.shape().to_vec(),
+                    context: format!("{name} input {i}"),
+                });
+            }
+            literals.push(t.to_literal()?);
+        }
+        let exe = self.executable(name)?;
+
+        let t0 = std::time::Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let root = result[0][0].to_literal_sync()?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.executions += 1;
+            s.exec_seconds += dt;
+        }
+
+        let parts = root.to_tuple()?;
+        if parts.len() != info.outputs.len() {
+            return Err(Error::other(format!(
+                "{name}: expected {} outputs, got {}",
+                info.outputs.len(),
+                parts.len()
+            )));
+        }
+        parts.into_iter().map(|l| literal_to_f32(&l)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn engine() -> Option<Engine> {
+        let m = Manifest::load_default().ok()?;
+        Engine::new(Arc::new(m)).ok()
+    }
+
+    #[test]
+    fn engine_boots_cpu_pjrt() {
+        let Some(e) = engine() else { return };
+        assert!(e.platform().to_lowercase().contains("cpu"));
+    }
+
+    #[test]
+    fn full_eval_runs_and_shapes_check() {
+        let Some(e) = engine() else { return };
+        let n = e.manifest().total_params;
+        let params = vec![0.0f32; n];
+        let x = vec![0.0f32; 16 * 32 * 32 * 3];
+        let out = e
+            .execute(
+                "full_eval_b16",
+                &[
+                    HostTensor::f32(&params, vec![n]),
+                    HostTensor::f32(&x, vec![16, 32, 32, 3]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].len(), 16 * 10);
+        // zero params -> zero logits
+        assert!(out[0].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn input_shape_mismatch_is_detected_before_launch() {
+        let Some(e) = engine() else { return };
+        let bad = vec![0.0f32; 3];
+        let err = e
+            .execute("full_eval_b16", &[HostTensor::f32(&bad, vec![3]), HostTensor::f32(&bad, vec![3])])
+            .unwrap_err();
+        assert!(matches!(err, Error::Shape { .. }));
+    }
+
+    #[test]
+    fn wrong_arity_is_detected() {
+        let Some(e) = engine() else { return };
+        assert!(e.execute("full_eval_b16", &[]).is_err());
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(e) = engine() else { return };
+        e.warm_up(&["full_eval_b16"]).unwrap();
+        let c1 = e.stats().compiles;
+        e.executable("full_eval_b16").unwrap();
+        assert_eq!(e.stats().compiles, c1);
+    }
+}

@@ -1,0 +1,396 @@
+//! The split-learning training engine (SplitFed-style, paper §II).
+//!
+//! One batch of the protocol:
+//!
+//! ```text
+//!   device:  smashed = device_fwd(dev_params, x)                 [Step 2]
+//!   uplink:  smashed -> edge
+//!   edge:    (srv', mom', g_smashed, loss)
+//!              = server_step(srv, mom, smashed, labels)          [Step 3a]
+//!   downlink: g_smashed -> device
+//!   device:  (dev', dmom') = device_bwd(dev, dmom, x, g_smashed) [Step 3b]
+//! ```
+//!
+//! All three phases are AOT-compiled HLO executables; this module owns the
+//! states on both sides and the per-phase host timing the perf pass reads.
+
+use crate::data::IMG_ELEMS;
+use crate::error::{Error, Result};
+use crate::model::ModelMeta;
+use crate::runtime::{Engine, HostTensor};
+
+/// Device-side training state (travels *with* the device).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceState {
+    pub sp: usize,
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+}
+
+impl DeviceState {
+    /// Slice the device half out of a full flat vector.
+    pub fn from_global(meta: &ModelMeta, sp: usize, global: &[f32]) -> Result<Self> {
+        let nd = meta.device_params(sp)?;
+        Ok(DeviceState {
+            sp,
+            params: global[..nd].to_vec(),
+            momentum: vec![0.0; nd],
+        })
+    }
+
+    /// Refresh parameters from a new global model, keeping momentum.
+    pub fn refresh_from_global(&mut self, global: &[f32]) {
+        let nd = self.params.len();
+        self.params.copy_from_slice(&global[..nd]);
+    }
+}
+
+/// Edge-side (per-device) training state — **this is what FedFly
+/// migrates** when the device moves.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerState {
+    pub sp: usize,
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+    /// Last smashed-gradient (checkpointed as the paper's "gradients").
+    pub last_grad_smashed: Vec<f32>,
+    pub last_loss: f32,
+    /// Completed batches since this state was created/reset.
+    pub batches_done: u64,
+}
+
+impl ServerState {
+    pub fn from_global(meta: &ModelMeta, sp: usize, global: &[f32]) -> Result<Self> {
+        let nd = meta.device_params(sp)?;
+        Ok(ServerState {
+            sp,
+            params: global[nd..].to_vec(),
+            momentum: vec![0.0; global.len() - nd],
+            last_grad_smashed: Vec::new(),
+            last_loss: f32::NAN,
+            batches_done: 0,
+        })
+    }
+
+    pub fn refresh_from_global(&mut self, global: &[f32]) {
+        let ns = self.params.len();
+        self.params.copy_from_slice(&global[global.len() - ns..]);
+    }
+
+    /// The SplitFed baseline's post-move state: fresh from the global
+    /// model, optimizer state lost (the destination edge had no copy).
+    pub fn restart_from_global(meta: &ModelMeta, sp: usize, global: &[f32]) -> Result<Self> {
+        Self::from_global(meta, sp, global)
+    }
+}
+
+/// Host wall-clock per phase of one batch (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimes {
+    pub device_fwd: f64,
+    pub server_step: f64,
+    pub device_bwd: f64,
+}
+
+impl PhaseTimes {
+    pub fn total(&self) -> f64 {
+        self.device_fwd + self.server_step + self.device_bwd
+    }
+}
+
+/// Outcome of one training batch.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchOutcome {
+    pub loss: f32,
+    pub times: PhaseTimes,
+}
+
+/// Split-learning engine bound to one artifact batch size.
+pub struct SplitEngine<'e> {
+    engine: &'e Engine,
+    meta: ModelMeta,
+    batch: usize,
+}
+
+impl<'e> SplitEngine<'e> {
+    pub fn new(engine: &'e Engine, meta: ModelMeta, batch: usize) -> Result<Self> {
+        if !meta.manifest.batch_variants.contains(&batch) {
+            return Err(Error::Config(format!(
+                "no artifacts for batch size {batch} (have {:?})",
+                meta.manifest.batch_variants
+            )));
+        }
+        Ok(SplitEngine {
+            engine,
+            meta,
+            batch,
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// Warm up (compile) the three phase executables for split `sp`.
+    pub fn warm_up(&self, sp: usize) -> Result<()> {
+        self.engine.warm_up(&[
+            self.meta.device_fwd_name(sp, self.batch).as_str(),
+            self.meta.server_step_name(sp, self.batch).as_str(),
+            self.meta.device_bwd_name(sp, self.batch).as_str(),
+        ])
+    }
+
+    /// Run one batch of split training, updating both states in place.
+    pub fn train_batch(
+        &self,
+        dev: &mut DeviceState,
+        srv: &mut ServerState,
+        x: &[f32],
+        labels: &[i32],
+    ) -> Result<BatchOutcome> {
+        if dev.sp != srv.sp {
+            return Err(Error::Config(format!(
+                "split mismatch: device sp{} vs server sp{}",
+                dev.sp, srv.sp
+            )));
+        }
+        let sp = dev.sp;
+        let b = self.batch;
+        if x.len() != b * IMG_ELEMS || labels.len() != b {
+            return Err(Error::other(format!(
+                "train_batch: bad batch sizes x={} labels={}",
+                x.len(),
+                labels.len()
+            )));
+        }
+        let mut times = PhaseTimes::default();
+
+        // Step 2: device forward -> smashed activation.
+        let t0 = std::time::Instant::now();
+        let smashed = {
+            let name = self.meta.device_fwd_name(sp, b);
+            let out = self.engine.execute(
+                &name,
+                &[
+                    HostTensor::f32(&dev.params, vec![dev.params.len()]),
+                    HostTensor::f32(x, vec![b, 32, 32, 3]),
+                ],
+            )?;
+            out.into_iter().next().unwrap()
+        };
+        times.device_fwd = t0.elapsed().as_secs_f64();
+
+        // Step 3a: edge-server step.
+        let smash_shape = {
+            let s = &self.meta.manifest.split(sp)?.smashed_shape;
+            vec![b, s[0], s[1], s[2]]
+        };
+        let t1 = std::time::Instant::now();
+        let (new_srv, new_mom, grad_smashed, loss) = {
+            let name = self.meta.server_step_name(sp, b);
+            let mut out = self.engine.execute(
+                &name,
+                &[
+                    HostTensor::f32(&srv.params, vec![srv.params.len()]),
+                    HostTensor::f32(&srv.momentum, vec![srv.momentum.len()]),
+                    HostTensor::f32(&smashed, smash_shape.clone()),
+                    HostTensor::i32(labels, vec![b]),
+                ],
+            )?;
+            let loss = out.pop().unwrap()[0];
+            let grad = out.pop().unwrap();
+            let mom = out.pop().unwrap();
+            let params = out.pop().unwrap();
+            (params, mom, grad, loss)
+        };
+        times.server_step = t1.elapsed().as_secs_f64();
+
+        // Step 3b: device backward.
+        let t2 = std::time::Instant::now();
+        let (new_dev, new_dmom) = {
+            let name = self.meta.device_bwd_name(sp, b);
+            let mut out = self.engine.execute(
+                &name,
+                &[
+                    HostTensor::f32(&dev.params, vec![dev.params.len()]),
+                    HostTensor::f32(&dev.momentum, vec![dev.momentum.len()]),
+                    HostTensor::f32(x, vec![b, 32, 32, 3]),
+                    HostTensor::f32(&grad_smashed, smash_shape),
+                ],
+            )?;
+            let mom = out.pop().unwrap();
+            let params = out.pop().unwrap();
+            (params, mom)
+        };
+        times.device_bwd = t2.elapsed().as_secs_f64();
+
+        dev.params = new_dev;
+        dev.momentum = new_dmom;
+        srv.params = new_srv;
+        srv.momentum = new_mom;
+        srv.last_grad_smashed = grad_smashed;
+        srv.last_loss = loss;
+        srv.batches_done += 1;
+
+        Ok(BatchOutcome { loss, times })
+    }
+
+    /// Monolithic (non-split) step — the classic-FL comparator.
+    pub fn full_step(
+        &self,
+        params: &mut Vec<f32>,
+        momentum: &mut Vec<f32>,
+        x: &[f32],
+        labels: &[i32],
+    ) -> Result<f32> {
+        let b = self.batch;
+        let name = self.meta.full_step_name(b);
+        let mut out = self.engine.execute(
+            &name,
+            &[
+                HostTensor::f32(params, vec![params.len()]),
+                HostTensor::f32(momentum, vec![momentum.len()]),
+                HostTensor::f32(x, vec![b, 32, 32, 3]),
+                HostTensor::i32(labels, vec![b]),
+            ],
+        )?;
+        let loss = out.pop().unwrap()[0];
+        *momentum = out.pop().unwrap();
+        *params = out.pop().unwrap();
+        Ok(loss)
+    }
+
+    /// Logits for a test batch (accuracy evaluation).
+    pub fn eval_logits(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        let b = self.batch;
+        let name = self.meta.full_eval_name(b);
+        let out = self.engine.execute(
+            &name,
+            &[
+                HostTensor::f32(params, vec![params.len()]),
+                HostTensor::f32(x, vec![b, 32, 32, 3]),
+            ],
+        )?;
+        Ok(out.into_iter().next().unwrap())
+    }
+}
+
+/// Reassemble a full flat parameter vector from the two halves.
+pub fn concat_params(dev: &DeviceState, srv: &ServerState) -> Vec<f32> {
+    let mut full = Vec::with_capacity(dev.params.len() + srv.params.len());
+    full.extend_from_slice(&dev.params);
+    full.extend_from_slice(&srv.params);
+    full
+}
+
+/// Top-1 accuracy from flat logits (batch x classes).
+pub fn accuracy_from_logits(logits: &[f32], labels: &[i32], classes: usize) -> f64 {
+    let n = labels.len();
+    let mut correct = 0usize;
+    for (i, &label) in labels.iter().enumerate() {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let mut best = 0usize;
+        for c in 1..classes {
+            if row[c] > row[best] {
+                best = c;
+            }
+        }
+        if best as i32 == label {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticCifar;
+    use crate::manifest::Manifest;
+    use std::sync::Arc;
+
+    fn setup() -> Option<(Engine, ModelMeta)> {
+        let m = Arc::new(Manifest::load_default().ok()?);
+        let meta = ModelMeta::new(m.clone());
+        let engine = Engine::new(m).ok()?;
+        Some((engine, meta))
+    }
+
+    #[test]
+    fn accuracy_from_logits_counts() {
+        let logits = vec![
+            1.0, 0.0, // -> 0
+            0.0, 2.0, // -> 1
+            3.0, 1.0, // -> 0
+        ];
+        assert!((accuracy_from_logits(&logits, &[0, 1, 1], 2) - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_training_equals_monolithic() {
+        // The split protocol through three separate executables must match
+        // the single full_step executable bit-for-bit-ish (f32 tolerance).
+        let Some((engine, meta)) = setup() else { return };
+        let se = SplitEngine::new(&engine, meta.clone(), 16).unwrap();
+        let ds = SyntheticCifar::new(0, 64);
+        let (x, y) = ds.batch(&(0..16).collect::<Vec<_>>());
+
+        let global = meta.init_params(42);
+        let sp = 2;
+        let mut dev = DeviceState::from_global(&meta, sp, &global).unwrap();
+        let mut srv = ServerState::from_global(&meta, sp, &global).unwrap();
+        let out = se.train_batch(&mut dev, &mut srv, &x, &y).unwrap();
+
+        let mut full = global.clone();
+        let mut mom = vec![0.0f32; full.len()];
+        let floss = se.full_step(&mut full, &mut mom, &x, &y).unwrap();
+
+        assert!((out.loss - floss).abs() < 1e-4, "{} vs {}", out.loss, floss);
+        let split_full = concat_params(&dev, &srv);
+        let max_diff = split_full
+            .iter()
+            .zip(&full)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-5, "max param diff {max_diff}");
+    }
+
+    #[test]
+    fn loss_decreases_over_batches() {
+        let Some((engine, meta)) = setup() else { return };
+        let se = SplitEngine::new(&engine, meta.clone(), 16).unwrap();
+        let ds = SyntheticCifar::new(1, 64);
+        let (x, y) = ds.batch(&(0..16).collect::<Vec<_>>());
+        let global = meta.init_params(0);
+        let mut dev = DeviceState::from_global(&meta, 2, &global).unwrap();
+        let mut srv = ServerState::from_global(&meta, 2, &global).unwrap();
+        let first = se.train_batch(&mut dev, &mut srv, &x, &y).unwrap().loss;
+        let mut last = first;
+        for _ in 0..4 {
+            last = se.train_batch(&mut dev, &mut srv, &x, &y).unwrap().loss;
+        }
+        assert!(last < first, "loss did not decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn bad_batch_size_rejected() {
+        let Some((engine, meta)) = setup() else { return };
+        assert!(SplitEngine::new(&engine, meta, 7).is_err());
+    }
+
+    #[test]
+    fn split_mismatch_rejected() {
+        let Some((engine, meta)) = setup() else { return };
+        let se = SplitEngine::new(&engine, meta.clone(), 16).unwrap();
+        let global = meta.init_params(0);
+        let mut dev = DeviceState::from_global(&meta, 1, &global).unwrap();
+        let mut srv = ServerState::from_global(&meta, 2, &global).unwrap();
+        let x = vec![0.0; 16 * IMG_ELEMS];
+        let y = vec![0i32; 16];
+        assert!(se.train_batch(&mut dev, &mut srv, &x, &y).is_err());
+    }
+}

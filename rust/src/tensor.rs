@@ -1,0 +1,241 @@
+//! Flat f32 tensors and the coordinator-side math (FedAvg sums, norms).
+//!
+//! The heavy compute lives in AOT-compiled HLO; this module only covers the
+//! aggregation/bookkeeping arithmetic the coordinator itself performs.
+
+use crate::error::{Error, Result};
+
+/// A dense f32 tensor: shape + row-major data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape {
+                expected: shape.clone(),
+                got: vec![data.len()],
+                context: "Tensor::new".into(),
+            });
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    /// 1-D tensor from a vector.
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Tensor {
+            shape: vec![data.len()],
+            data,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape {
+                expected: shape,
+                got: self.shape.clone(),
+                context: "reshape".into(),
+            });
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// `out += w * x` over flat slices (FedAvg accumulation).
+pub fn axpy(out: &mut [f32], w: f32, x: &[f32]) {
+    debug_assert_eq!(out.len(), x.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o += w * v;
+    }
+}
+
+/// Weighted average of flat parameter vectors: `Σ wᵢ·xᵢ / Σ wᵢ`.
+///
+/// This is FedAvg's core reduction; weights are sample counts.
+pub fn weighted_average(vectors: &[&[f32]], weights: &[f64]) -> Result<Vec<f32>> {
+    if vectors.is_empty() || vectors.len() != weights.len() {
+        return Err(Error::other("weighted_average: arity mismatch"));
+    }
+    let n = vectors[0].len();
+    if vectors.iter().any(|v| v.len() != n) {
+        return Err(Error::other("weighted_average: length mismatch"));
+    }
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        return Err(Error::other("weighted_average: non-positive total weight"));
+    }
+    // f64 accumulation: aggregation error must not grow with device count.
+    let mut acc = vec![0.0f64; n];
+    for (v, &w) in vectors.iter().zip(weights) {
+        let wn = w / total;
+        for (a, &x) in acc.iter_mut().zip(*v) {
+            *a += wn * x as f64;
+        }
+    }
+    Ok(acc.into_iter().map(|x| x as f32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_element_count() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn reshape_checks() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(t.clone().reshaped(vec![2, 2]).is_ok());
+        assert!(t.reshaped(vec![3, 2]).is_err());
+    }
+
+    #[test]
+    fn l2_norm() {
+        let t = Tensor::from_vec(vec![3.0, 4.0]);
+        assert!((t.l2_norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut out = vec![1.0, 1.0];
+        axpy(&mut out, 0.5, &[2.0, 4.0]);
+        assert_eq!(out, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn weighted_average_basic() {
+        let a = [0.0f32, 0.0];
+        let b = [1.0f32, 2.0];
+        let avg = weighted_average(&[&a, &b], &[1.0, 3.0]).unwrap();
+        assert!((avg[0] - 0.75).abs() < 1e-7);
+        assert!((avg[1] - 1.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn weighted_average_identity() {
+        let a = [1.5f32, -2.0, 3.25];
+        let avg = weighted_average(&[&a], &[7.0]).unwrap();
+        assert_eq!(avg, a.to_vec());
+    }
+
+    #[test]
+    fn weighted_average_errors() {
+        let a = [1.0f32];
+        let b = [1.0f32, 2.0];
+        assert!(weighted_average(&[], &[]).is_err());
+        assert!(weighted_average(&[&a, &b], &[1.0, 1.0]).is_err());
+        assert!(weighted_average(&[&a], &[0.0]).is_err());
+    }
+
+    // Property tests (hand-rolled harness): FedAvg invariants.
+    #[test]
+    fn prop_weighted_average_bounds_and_permutation_invariance() {
+        use crate::util::prop::forall;
+        use crate::util::Rng;
+        forall(100, |r: &mut Rng| {
+            let k = 2 + r.below(5);
+            let n = 1 + r.below(32);
+            let vecs: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..n).map(|_| (r.gaussian() * 3.0) as f32).collect())
+                .collect();
+            let weights: Vec<f64> = (0..k).map(|_| 0.1 + r.next_f64() * 10.0).collect();
+            let refs: Vec<&[f32]> = vecs.iter().map(|v| v.as_slice()).collect();
+            let avg = weighted_average(&refs, &weights).unwrap();
+
+            // (1) component-wise bounded by min/max of inputs
+            for i in 0..n {
+                let lo = vecs.iter().map(|v| v[i]).fold(f32::INFINITY, f32::min);
+                let hi = vecs.iter().map(|v| v[i]).fold(f32::NEG_INFINITY, f32::max);
+                assert!(avg[i] >= lo - 1e-4 && avg[i] <= hi + 1e-4);
+            }
+
+            // (2) permutation invariance
+            let mut order: Vec<usize> = (0..k).collect();
+            r.shuffle(&mut order);
+            let refs_p: Vec<&[f32]> = order.iter().map(|&i| vecs[i].as_slice()).collect();
+            let w_p: Vec<f64> = order.iter().map(|&i| weights[i]).collect();
+            let avg_p = weighted_average(&refs_p, &w_p).unwrap();
+            for i in 0..n {
+                assert!((avg[i] - avg_p[i]).abs() < 1e-5);
+            }
+
+            // (3) scale invariance of weights
+            let w_s: Vec<f64> = weights.iter().map(|w| w * 123.456).collect();
+            let avg_s = weighted_average(&refs, &w_s).unwrap();
+            for i in 0..n {
+                assert!((avg[i] - avg_s[i]).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_average_of_identical_vectors_is_identity() {
+        use crate::util::prop::forall;
+        use crate::util::Rng;
+        forall(50, |r: &mut Rng| {
+            let n = 1 + r.below(64);
+            let v: Vec<f32> = (0..n).map(|_| r.gaussian() as f32).collect();
+            let k = 1 + r.below(6);
+            let refs: Vec<&[f32]> = (0..k).map(|_| v.as_slice()).collect();
+            let weights: Vec<f64> = (0..k).map(|_| 0.5 + r.next_f64()).collect();
+            let avg = weighted_average(&refs, &weights).unwrap();
+            for i in 0..n {
+                assert!((avg[i] - v[i]).abs() < 1e-5);
+            }
+        });
+    }
+}

@@ -1,0 +1,202 @@
+//! Testbed compute-time model.
+//!
+//! The paper's devices are Raspberry Pi 3/4s and its edge servers are
+//! laptop-class i5/i7 machines (§V-A).  We model each entity's *effective*
+//! training throughput (sustained f32 GFLOP/s on small-conv workloads —
+//! far below peak) and derive per-phase durations from the manifest's FLOP
+//! counts.  The constants were picked so that a full SP2 round over 25% of
+//! CIFAR-10 lands in the paper's Fig-3 ballpark (hundreds of seconds on a
+//! Pi 3); all *comparative* claims (who wins, by what factor) depend only
+//! on ratios, which come from the published hardware specs.
+
+use crate::model::ModelMeta;
+use crate::netsim::NetModel;
+
+/// A compute entity's effective training throughput.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ComputeProfile {
+    pub name: &'static str,
+    /// Sustained f32 GFLOP/s on the VGG-5 training workload.
+    pub effective_gflops: f64,
+}
+
+/// Paper testbed profiles (§V-A).
+pub mod profiles {
+    use super::ComputeProfile;
+
+    /// Raspberry Pi 3 Model B: 1.2 GHz Cortex-A53, 1 GB RAM.
+    pub const PI3: ComputeProfile = ComputeProfile {
+        name: "pi3",
+        effective_gflops: 0.9,
+    };
+    /// Raspberry Pi 4 Model B: 1.5 GHz Cortex-A72, 4 GB RAM.
+    pub const PI4: ComputeProfile = ComputeProfile {
+        name: "pi4",
+        effective_gflops: 2.2,
+    };
+    /// Edge server 1: quad-core i5, 8 GB RAM.
+    pub const EDGE_I5: ComputeProfile = ComputeProfile {
+        name: "edge-i5",
+        effective_gflops: 18.0,
+    };
+    /// Edge server 2: quad-core i7, 16 GB RAM.
+    pub const EDGE_I7: ComputeProfile = ComputeProfile {
+        name: "edge-i7",
+        effective_gflops: 26.0,
+    };
+    /// Central server: quad-core i5, 16 GB RAM.
+    pub const CLOUD: ComputeProfile = ComputeProfile {
+        name: "cloud",
+        effective_gflops: 22.0,
+    };
+}
+
+impl ComputeProfile {
+    /// Seconds to execute `flops` on this entity.
+    pub fn compute_time(&self, flops: f64) -> f64 {
+        flops / (self.effective_gflops * 1e9)
+    }
+}
+
+/// Simulated-time accounting for one (device, edge) training pair.
+#[derive(Clone, Debug)]
+pub struct PairTimeModel {
+    pub device: ComputeProfile,
+    pub edge: ComputeProfile,
+    pub net: NetModel,
+}
+
+/// Simulated durations of one batch's split-training pipeline (seconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BatchTime {
+    pub device_fwd: f64,
+    pub uplink: f64,
+    pub server_step: f64,
+    pub downlink: f64,
+    pub device_bwd: f64,
+}
+
+impl BatchTime {
+    /// Serial pipeline total (the paper's testbed is synchronous per batch).
+    pub fn total(&self) -> f64 {
+        self.device_fwd + self.uplink + self.server_step + self.downlink + self.device_bwd
+    }
+}
+
+impl PairTimeModel {
+    /// Simulated time for one batch at split `sp` with `batch` images.
+    pub fn batch_time(&self, meta: &ModelMeta, sp: usize, batch: usize) -> BatchTime {
+        let split = meta.manifest.split(sp).expect("split");
+        let b = batch as f64;
+        let dev_fwd = split.device_fwd_flops_per_image * b;
+        // device_bwd recomputes the forward + 2x-forward backward
+        let dev_bwd = split.device_fwd_flops_per_image * b * (1.0 + crate::model::BWD_FLOP_FACTOR);
+        let srv = split.server_fwd_flops_per_image * b * (1.0 + crate::model::BWD_FLOP_FACTOR);
+        let smashed = meta.smashed_bytes(sp, batch).expect("smashed");
+        let one_way = self.net.device_edge.transfer_time(smashed);
+        BatchTime {
+            device_fwd: self.device.compute_time(dev_fwd),
+            uplink: one_way,
+            server_step: self.edge.compute_time(srv),
+            downlink: one_way,
+            device_bwd: self.device.compute_time(dev_bwd),
+        }
+    }
+
+    /// Simulated time for one local epoch (= one FL round of local work,
+    /// paper §IV) over `samples` images in batches of `batch`.
+    pub fn round_time(&self, meta: &ModelMeta, sp: usize, batch: usize, samples: usize) -> f64 {
+        let batches = samples / batch;
+        let bt = self.batch_time(meta, sp, batch);
+        let sync = self
+            .net
+            .model_sync_time(meta.total_params() * 4);
+        bt.total() * batches as f64 + sync
+    }
+
+    /// Classic (non-split) FL: the device trains the *whole* VGG-5
+    /// locally — the paper's §I motivation for offloading in the first
+    /// place.  No smashed-data exchange; only the model sync remains.
+    pub fn classic_round_time(&self, meta: &ModelMeta, batch: usize, samples: usize) -> f64 {
+        let total_fwd: f64 = meta.manifest.block_fwd_flops.iter().sum();
+        let per_image = total_fwd * (1.0 + crate::model::BWD_FLOP_FACTOR);
+        let batches = samples / batch;
+        let compute = self
+            .device
+            .compute_time(per_image * (batches * batch) as f64);
+        compute + self.net.model_sync_time(meta.total_params() * 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::Manifest;
+    use std::sync::Arc;
+
+    fn meta() -> Option<ModelMeta> {
+        Manifest::load_default()
+            .ok()
+            .map(|m| ModelMeta::new(Arc::new(m)))
+    }
+
+    fn pair(dev: ComputeProfile) -> PairTimeModel {
+        PairTimeModel {
+            device: dev,
+            edge: profiles::EDGE_I5,
+            net: NetModel::default(),
+        }
+    }
+
+    #[test]
+    fn pi3_slower_than_pi4() {
+        let Some(m) = meta() else { return };
+        let t3 = pair(profiles::PI3).round_time(&m, 2, 100, 12_500);
+        let t4 = pair(profiles::PI4).round_time(&m, 2, 100, 12_500);
+        assert!(t3 > t4, "pi3 {t3} <= pi4 {t4}");
+    }
+
+    #[test]
+    fn deeper_split_costs_more_device_time() {
+        // Paper Fig 3c: SP1 -> SP3 increases device-side computation.
+        let Some(m) = meta() else { return };
+        let p = pair(profiles::PI3);
+        let t1 = p.batch_time(&m, 1, 100).device_fwd;
+        let t2 = p.batch_time(&m, 2, 100).device_fwd;
+        let t3 = p.batch_time(&m, 3, 100).device_fwd;
+        assert!(t1 < t2 && t2 < t3);
+    }
+
+    #[test]
+    fn round_time_linear_in_samples() {
+        let Some(m) = meta() else { return };
+        let p = pair(profiles::PI4);
+        let t25 = p.round_time(&m, 2, 100, 12_500);
+        let t50 = p.round_time(&m, 2, 100, 25_000);
+        // double data ~ double time (modulo the constant sync term)
+        assert!(t50 / t25 > 1.8 && t50 / t25 < 2.2, "ratio {}", t50 / t25);
+    }
+
+    #[test]
+    fn offloading_beats_classic_on_constrained_devices() {
+        // The paper's premise: running the full DNN on a Pi is slower
+        // than split training against an edge server.
+        let Some(m) = meta() else { return };
+        let p = pair(profiles::PI3);
+        let split = p.round_time(&m, 2, 100, 12_500);
+        let classic = p.classic_round_time(&m, 100, 12_500);
+        assert!(
+            classic > split,
+            "classic {classic} should exceed split {split} on a Pi3"
+        );
+    }
+
+    #[test]
+    fn paper_ballpark_round_time() {
+        // Fig 3a ballpark: Pi3, SP2, 25% of 50k CIFAR-10, batch 100 —
+        // the per-round device time should be minutes, not millis or hours.
+        let Some(m) = meta() else { return };
+        let t = pair(profiles::PI3).round_time(&m, 2, 100, 12_500);
+        assert!(t > 30.0 && t < 3600.0, "round {t} s");
+    }
+}

@@ -1,0 +1,140 @@
+//! Little-endian byte marshalling for checkpoints and the wire protocol.
+
+/// Append a u32 (LE).
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a u64 (LE).
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append an f32 (LE bit pattern).
+pub fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append an f32 slice as raw LE bytes.
+pub fn put_f32_slice(buf: &mut Vec<u8>, v: &[f32]) {
+    put_u64(buf, v.len() as u64);
+    buf.reserve(v.len() * 4);
+    for x in v {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Append a length-prefixed UTF-8 string.
+pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Cursor over a byte slice with checked reads.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "short read: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.u64()? as usize;
+        if n > self.remaining() / 4 {
+            return Err(format!("f32 vec length {n} exceeds buffer"));
+        }
+        let raw = self.take(n * 4)?;
+        let mut out = Vec::with_capacity(n);
+        for c in raw.chunks_exact(4) {
+            out.push(f32::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    pub fn string(&mut self) -> Result<String, String> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|e| e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 0xDEADBEEF);
+        put_u64(&mut buf, u64::MAX - 1);
+        put_f32(&mut buf, -1.5e-3);
+        put_str(&mut buf, "edge-1");
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f32().unwrap(), -1.5e-3);
+        assert_eq!(r.string().unwrap(), "edge-1");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn roundtrip_f32_slice_preserves_bits() {
+        let v = vec![0.0f32, -0.0, f32::MIN_POSITIVE, 1.0, f32::INFINITY, -123.456];
+        let mut buf = Vec::new();
+        put_f32_slice(&mut buf, &v);
+        let out = Reader::new(&buf).f32_vec().unwrap();
+        assert_eq!(v.len(), out.len());
+        for (a, b) in v.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn short_read_is_error() {
+        let mut r = Reader::new(&[1, 2, 3]);
+        assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn oversized_vec_len_is_error() {
+        let mut buf = Vec::new();
+        put_u64(&mut buf, u64::MAX);
+        assert!(Reader::new(&buf).f32_vec().is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! Minimal leveled logger (the offline crate set has no `log`/`env_logger`).
+//!
+//! Level is taken from `FEDFLY_LOG` (`error`|`warn`|`info`|`debug`|`trace`),
+//! defaulting to `info`.  Output goes to stderr so experiment stdout stays
+//! machine-parseable.
+
+use std::io::Write;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn parse(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static MAX_LEVEL: OnceLock<Level> = OnceLock::new();
+static START: OnceLock<Instant> = OnceLock::new();
+
+pub fn max_level() -> Level {
+    *MAX_LEVEL.get_or_init(|| {
+        Level::parse(&std::env::var("FEDFLY_LOG").unwrap_or_default())
+    })
+}
+
+/// Log a line at `level` with a module tag.
+pub fn log(level: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    if level > max_level() {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed();
+    let mut err = std::io::stderr().lock();
+    let _ = writeln!(
+        err,
+        "[{:>9.3}s {} {}] {}",
+        t.as_secs_f64(),
+        level.tag(),
+        module,
+        args
+    );
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Info);
+        assert!(Level::Info < Level::Trace);
+    }
+
+    #[test]
+    fn parse_defaults_to_info() {
+        assert_eq!(Level::parse(""), Level::Info);
+        assert_eq!(Level::parse("bogus"), Level::Info);
+        assert_eq!(Level::parse("DEBUG"), Level::Debug);
+    }
+}

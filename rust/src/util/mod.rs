@@ -1,0 +1,11 @@
+//! Small self-contained substrates: deterministic RNG, logging, byte
+//! marshalling, wall-clock timing, and a miniature property-testing
+//! harness (the offline crate set has no `rand`/`log`/`proptest`).
+
+pub mod bytes;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;

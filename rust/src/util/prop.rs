@@ -1,0 +1,80 @@
+//! Miniature property-testing harness (offline substitute for `proptest`).
+//!
+//! `forall(n, f)` runs `f` against `n` independently seeded RNGs; on panic
+//! it re-raises with the failing seed so the case can be replayed with
+//! `replay(seed, f)`.  Deliberately tiny: generation strategy lives in the
+//! test body (our domains are small), shrinking is by-seed replay.
+
+use super::rng::Rng;
+
+/// Run `f` for `n` random cases.  Panics (with the seed) on first failure.
+pub fn forall(n: u64, f: impl Fn(&mut Rng)) {
+    let base = match std::env::var("FEDFLY_PROP_SEED") {
+        Ok(s) => s.parse::<u64>().unwrap_or(0xFEDF17),
+        Err(_) => 0xFEDF17,
+    };
+    for case in 0..n {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            f(&mut rng);
+        }));
+        if let Err(payload) = result {
+            eprintln!(
+                "property failed at case {case} (seed {seed}); replay with \
+                 FEDFLY_PROP_SEED={seed} and n=1 or prop::replay({seed}, ..)"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay(seed: u64, mut f: impl FnMut(&mut Rng)) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static COUNT: AtomicU64 = AtomicU64::new(0);
+        forall(25, |_r| {
+            COUNT.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(COUNT.load(Ordering::SeqCst), 25);
+    }
+
+    #[test]
+    fn forall_seeds_differ_across_cases() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let seen: Mutex<HashSet<u64>> = Mutex::new(HashSet::new());
+        forall(20, |r| {
+            seen.lock().unwrap().insert(r.next_u64());
+        });
+        assert_eq!(seen.lock().unwrap().len(), 20);
+    }
+
+    #[test]
+    #[should_panic(expected = "intentional failure")]
+    fn forall_propagates_failure() {
+        forall(10, |r| {
+            let _ = r.next_u64();
+            assert!(false, "intentional failure");
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut v1 = Vec::new();
+        let mut v2 = Vec::new();
+        replay(42, |r| v1.push(r.next_u64()));
+        replay(42, |r| v2.push(r.next_u64()));
+        assert_eq!(v1, v2);
+    }
+}

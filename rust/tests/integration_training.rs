@@ -1,0 +1,133 @@
+//! End-to-end training behaviour through the AOT artifacts.
+
+use fedfly::config::{ExecMode, RunConfig};
+use fedfly::coordinator::Runner;
+use fedfly::experiments::load_meta;
+use fedfly::model::ModelMeta;
+use fedfly::runtime::Engine;
+
+fn setup() -> Option<(Engine, ModelMeta)> {
+    let meta = load_meta().ok()?;
+    let engine = Engine::new(meta.manifest.clone()).ok()?;
+    Some((engine, meta))
+}
+
+#[test]
+fn federated_training_learns() {
+    let Some((engine, meta)) = setup() else { return };
+    let mut cfg = RunConfig::paper_testbed();
+    cfg.rounds = 8;
+    cfg.batch = 16;
+    cfg.train_samples = 512;
+    cfg.test_samples = 160;
+    cfg.exec = ExecMode::Real;
+    cfg.eval_every = Some(4);
+    let report = Runner::new(cfg, meta).unwrap().run(Some(&engine)).unwrap();
+
+    let first = report.rounds.first().unwrap().mean_loss;
+    let last = report.rounds.last().unwrap().mean_loss;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+
+    let acc = report.final_accuracy().unwrap();
+    assert!(acc > 0.15, "accuracy {acc} not above chance after training");
+}
+
+#[test]
+fn imbalanced_sharding_trains_and_weights_aggregation() {
+    let Some((engine, meta)) = setup() else { return };
+    let mut cfg = RunConfig::paper_testbed();
+    cfg.rounds = 4;
+    cfg.batch = 16;
+    cfg.train_samples = 384;
+    cfg.test_samples = 64;
+    cfg.exec = ExecMode::Real;
+    cfg.eval_every = None;
+    cfg.fractions = fedfly::data::imbalanced_fractions(4, 0, 0.5);
+    let report = Runner::new(cfg, meta).unwrap().run(Some(&engine)).unwrap();
+    let first = report.rounds.first().unwrap().mean_loss;
+    let last = report.rounds.last().unwrap().mean_loss;
+    assert!(last < first);
+    // the heavy device does more batches -> more host time
+    let s = report.summaries();
+    let heavy = report
+        .rounds
+        .iter()
+        .map(|r| r.devices[0].host_seconds)
+        .sum::<f64>();
+    let light = report
+        .rounds
+        .iter()
+        .map(|r| r.devices[1].host_seconds)
+        .sum::<f64>();
+    assert!(heavy > light, "heavy device should spend more compute time");
+    assert_eq!(s.len(), 4);
+}
+
+#[test]
+fn all_split_points_train() {
+    let Some((engine, meta)) = setup() else { return };
+    for sp in 1..=3 {
+        let mut cfg = RunConfig::paper_testbed();
+        cfg.rounds = 2;
+        cfg.batch = 16;
+        cfg.sp = sp;
+        cfg.train_samples = 128;
+        cfg.test_samples = 64;
+        cfg.exec = ExecMode::Real;
+        cfg.eval_every = None;
+        let report = Runner::new(cfg, meta.clone())
+            .unwrap()
+            .run(Some(&engine))
+            .unwrap();
+        assert!(report.rounds[1].mean_loss.is_finite(), "sp{sp} produced NaN loss");
+    }
+}
+
+#[test]
+fn real_and_sim_modes_agree_on_simulated_time() {
+    let Some((engine, meta)) = setup() else { return };
+    let mut cfg = RunConfig::paper_testbed();
+    cfg.rounds = 2;
+    cfg.batch = 16;
+    cfg.train_samples = 128;
+    cfg.test_samples = 64;
+    cfg.eval_every = None;
+
+    let mut real = cfg.clone();
+    real.exec = ExecMode::Real;
+    let r = Runner::new(real, meta.clone()).unwrap().run(Some(&engine)).unwrap();
+
+    cfg.exec = ExecMode::SimOnly;
+    let s = Runner::new(cfg, meta).unwrap().run(None).unwrap();
+
+    for (rr, rs) in r.rounds.iter().zip(&s.rounds) {
+        for (dr, ds) in rr.devices.iter().zip(&rs.devices) {
+            assert!((dr.sim_seconds - ds.sim_seconds).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn run_rejects_real_mode_without_engine() {
+    let Some((_engine, meta)) = setup() else { return };
+    let mut cfg = RunConfig::paper_testbed();
+    cfg.exec = ExecMode::Real;
+    cfg.rounds = 1;
+    cfg.batch = 16;
+    let err = Runner::new(cfg, meta).unwrap().run(None).unwrap_err();
+    assert!(err.to_string().contains("engine"));
+}
+
+#[test]
+fn report_csv_and_json_export() {
+    let Some((_engine, meta)) = setup() else { return };
+    let mut cfg = RunConfig::paper_testbed();
+    cfg.exec = ExecMode::SimOnly;
+    cfg.rounds = 5;
+    let report = Runner::new(cfg, meta).unwrap().run(None).unwrap();
+    let csv = report.to_csv();
+    assert_eq!(csv.lines().count(), 1 + 5 * 4);
+    let j = fedfly::json::to_string_pretty(&report.to_json());
+    let v = fedfly::json::parse(&j).unwrap();
+    assert_eq!(v.get_usize("rounds").unwrap(), 5);
+}
