@@ -1,0 +1,152 @@
+//! Round-throughput scaling of the worker-pool runner and the chunked
+//! parallel FedAvg reduction (EXPERIMENTS.md §Perf L4).
+//!
+//! Two sections:
+//! 1. FedAvg reduction in isolation (no artifacts needed): 8 devices x
+//!    1M params, workers 1/2/4/8, with a bit-identity check against the
+//!    serial result.
+//! 2. Full Real-mode rounds at 8 devices over 1/2/4/8 workers (needs
+//!    `make artifacts`; skipped quietly without them).  Reports
+//!    `report.perf.train_wall_seconds` — the per-round training wall time
+//!    with pool startup and HLO compiles excluded — which is the quantity
+//!    the ">= 2x at 4 workers" acceptance line refers to.
+//!
+//! Run with: `cargo bench --bench bench_throughput`
+
+mod harness;
+
+use fedfly::config::{ExecMode, RunConfig};
+use fedfly::coordinator::Runner;
+use fedfly::experiments::load_meta;
+use fedfly::mobility::{MoveEvent, Schedule};
+use fedfly::tensor::weighted_average_split_into;
+use fedfly::timesim::profiles;
+use fedfly::util::Rng;
+
+fn main() {
+    reduction_scaling();
+    real_round_scaling();
+}
+
+// ---------------------------------------------------------------------------
+// Section 1: FedAvg reduction scaling (artifact-free)
+
+fn reduction_scaling() {
+    harness::header("parallel FedAvg reduction, 8 devices x 1M params");
+    let n = 1_000_000usize;
+    let nd = 123_457usize; // uneven device/server split straddles chunks
+    let mut rng = Rng::new(42);
+    let sources: Vec<(Vec<f32>, Vec<f32>)> = (0..8)
+        .map(|_| {
+            (
+                (0..nd).map(|_| rng.next_f32() - 0.5).collect(),
+                (0..n - nd).map(|_| rng.next_f32() - 0.5).collect(),
+            )
+        })
+        .collect();
+    let halves: Vec<(&[f32], &[f32])> = sources
+        .iter()
+        .map(|(d, s)| (d.as_slice(), s.as_slice()))
+        .collect();
+    let weights: Vec<f64> = (0..8).map(|d| 1.0 + d as f64).collect();
+
+    let mut reference = vec![0.0f32; n];
+    let mut scratch: Vec<f64> = Vec::new();
+    weighted_average_split_into(&mut reference, &halves, &weights, 1, &mut scratch).unwrap();
+
+    let mut baseline = f64::NAN;
+    for &workers in &[1usize, 2, 4, 8] {
+        let mut out = vec![0.0f32; n];
+        let r = harness::bench(&format!("fedavg/reduce-8x1M-w{workers}"), 2, 20, || {
+            weighted_average_split_into(&mut out, &halves, &weights, workers, &mut scratch)
+                .unwrap()
+        });
+        for (i, (a, b)) in out.iter().zip(&reference).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "workers={workers} diverges from serial at element {i}"
+            );
+        }
+        if workers == 1 {
+            baseline = r.min_s;
+        } else {
+            println!(
+                "    -> speedup vs serial: {:.2}x (min-to-min)",
+                baseline / r.min_s
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Section 2: Real-mode round throughput (needs artifacts)
+
+fn throughput_cfg(workers: usize) -> RunConfig {
+    let mut cfg = RunConfig::paper_testbed();
+    cfg.rounds = 6;
+    cfg.batch = 16;
+    cfg.train_samples = 512; // 64 samples -> 4 batches per device-round
+    cfg.test_samples = 64;
+    cfg.fractions = vec![0.125; 8];
+    cfg.device_profiles = vec![profiles::PI4; 8];
+    cfg.initial_edge = vec![0, 0, 0, 0, 1, 1, 1, 1];
+    cfg.exec = ExecMode::Real;
+    cfg.eval_every = None;
+    cfg.workers = workers;
+    // A mid-run migration, so the measured rounds include the checkpoint
+    // path the paper cares about.
+    cfg.schedule = Schedule::new(vec![MoveEvent { round: 3, device: 0, to_edge: 1 }]);
+    cfg
+}
+
+fn real_round_scaling() {
+    harness::header("Real-mode round throughput, 8 devices x 4 batches");
+    let Ok(meta) = load_meta() else {
+        println!("(artifacts missing -- run `make artifacts`; skipping Real-mode section)");
+        return;
+    };
+    let Ok(engine) = fedfly::runtime::Engine::new(meta.manifest.clone()) else {
+        println!("(PJRT engine unavailable; skipping Real-mode section)");
+        return;
+    };
+
+    let mut serial_wall = f64::NAN;
+    let mut serial_bits: Vec<u32> = Vec::new();
+    for &workers in &[1usize, 2, 4, 8] {
+        let runner = Runner::new(throughput_cfg(workers), meta.clone()).unwrap();
+        let report = if workers == 1 {
+            runner.run(Some(&engine)).unwrap()
+        } else {
+            runner.run(None).unwrap()
+        };
+        let wall = report.perf.train_wall_seconds;
+        let bits: Vec<u32> = report.final_params.iter().map(|p| p.to_bits()).collect();
+        if workers == 1 {
+            serial_wall = wall;
+            serial_bits = bits;
+            println!(
+                "throughput/rounds-8dev-w1: train wall {:.3}s over {} rounds (baseline)",
+                wall,
+                report.rounds.len()
+            );
+        } else {
+            assert_eq!(bits, serial_bits, "workers={workers} changed the result");
+            println!(
+                "throughput/rounds-8dev-w{workers}: train wall {:.3}s, speedup {:.2}x (bit-identical)",
+                wall,
+                serial_wall / wall
+            );
+        }
+        let imbalance: f64 = report
+            .perf
+            .workers_perf
+            .iter()
+            .map(|w| w.barrier_wait_seconds)
+            .sum();
+        println!(
+            "    barrier wait across workers: {imbalance:.3}s; fedavg {:.3}s",
+            report.perf.aggregate_seconds
+        );
+    }
+}

@@ -52,6 +52,10 @@ pub struct RunConfig {
     pub eval_every: Option<u64>,
     /// RNG seed for init/sharding/batch order.
     pub seed: u64,
+    /// Worker threads for per-round device training, the FedAvg reduction
+    /// and evaluation.  `1` = fully serial (the reference path); any value
+    /// produces bit-identical results (see EXPERIMENTS.md §Perf L4).
+    pub workers: usize,
     /// Failure injection: probability that a FedFly checkpoint transfer
     /// is lost/corrupted in transit, forcing a restart fallback at the
     /// destination edge (0.0 = reliable network).
@@ -80,6 +84,7 @@ impl RunConfig {
             exec: ExecMode::SimOnly,
             eval_every: None,
             seed: 7,
+            workers: 1,
             fault_loss_prob: 0.0,
         }
     }
@@ -146,6 +151,9 @@ impl RunConfig {
         if self.rounds == 0 {
             return Err(Error::Config("rounds == 0".into()));
         }
+        if self.workers == 0 {
+            return Err(Error::Config("workers == 0 (use 1 for serial)".into()));
+        }
         if !(0.0..=1.0).contains(&self.fault_loss_prob) {
             return Err(Error::Config(format!(
                 "fault_loss_prob {} not in [0,1]",
@@ -194,6 +202,7 @@ impl RunConfig {
                 }),
             ),
             ("seed", json::num(self.seed as f64)),
+            ("workers", json::num(self.workers as f64)),
             (
                 "moves",
                 json::arr(
@@ -242,6 +251,15 @@ mod tests {
         c.rounds = 10;
         c.schedule = Schedule::at_fraction(0, 0.5, 100, 1); // round 50 > 10
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_zero_workers() {
+        let mut c = RunConfig::paper_testbed();
+        c.workers = 0;
+        assert!(c.validate().is_err());
+        c.workers = 8;
+        c.validate().unwrap();
     }
 
     #[test]

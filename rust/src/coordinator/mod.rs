@@ -17,21 +17,24 @@
 //!    destination restarts from the current global model.
 //!
 //! [`distributed`] runs the identical protocol across real TCP sockets.
+//! [`parallel`] fans the per-device training of one round out over a pool
+//! of engine-owning worker threads (`RunConfig::workers`); results are
+//! bit-identical to the serial path for every worker count.
 
 pub mod distributed;
-
+pub(crate) mod parallel;
 
 use crate::config::{ExecMode, RunConfig};
 use crate::data::{partition, BatchIter, Shard, SyntheticCifar};
 use crate::error::{Error, Result};
-use crate::fl::{Contribution, GlobalModel};
-use crate::metrics::{DeviceRound, RoundRecord, RunReport};
+use crate::fl::GlobalModel;
+use crate::metrics::{DeviceRound, RoundRecord, RunPerf, RunReport, WorkerPerf};
 use crate::migration::{
     codec::Checkpoint, InMemTransport, MigrationRoute, Strategy, Transport,
 };
 use crate::model::ModelMeta;
 use crate::runtime::Engine;
-use crate::split::{accuracy_from_logits, concat_params, DeviceState, ServerState, SplitEngine};
+use crate::split::{accuracy_from_logits, DeviceState, ServerState, SplitEngine};
 use crate::timesim::PairTimeModel;
 use crate::util::Rng;
 
@@ -63,21 +66,38 @@ impl Runner {
         &self.cfg
     }
 
-    /// Execute the run.  `engine` is required in [`ExecMode::Real`].
+    /// Execute the run.
+    ///
+    /// In [`ExecMode::Real`] with `cfg.workers == 1` the caller must pass
+    /// an `engine`; with `workers > 1` every pool worker builds its own
+    /// private engine (the PJRT client is not `Send`), so `engine` may be
+    /// `None`.
     pub fn run(&self, engine: Option<&Engine>) -> Result<RunReport> {
         let cfg = &self.cfg;
         let meta = &self.meta;
         let real = cfg.exec == ExecMode::Real;
-        if real && engine.is_none() {
-            return Err(Error::Config("Real mode requires an engine".into()));
+        let n_workers = cfg.workers.max(1);
+        if real && engine.is_none() && n_workers == 1 {
+            return Err(Error::Config(
+                "Real mode requires an engine (or workers > 1, where each worker owns one)"
+                    .into(),
+            ));
         }
+        // Serial reference path borrows the caller's engine; the parallel
+        // path leaves this `None` and lets each worker own its engine.
         let split_engine = match engine {
-            Some(e) if real => Some(SplitEngine::new(e, meta.clone(), cfg.batch)?),
+            Some(e) if real && n_workers == 1 => {
+                let se = SplitEngine::new(e, meta.clone(), cfg.batch)?;
+                se.warm_up(cfg.sp)?;
+                Some(se)
+            }
             _ => None,
         };
-        if let Some(se) = &split_engine {
-            se.warm_up(cfg.sp)?;
-        }
+        // Snapshot after warm-up so the delta attributes run work only.
+        let engine_stats0 = match (&split_engine, engine) {
+            (Some(_), Some(e)) => Some(e.stats()),
+            _ => None,
+        };
 
         let mut root_rng = Rng::new(cfg.seed);
         // Dedicated stream for failure injection so fault decisions do not
@@ -87,8 +107,37 @@ impl Runner {
         let test = SyntheticCifar::new(cfg.seed ^ 0x7E57, cfg.test_samples);
         let shards = partition(cfg.train_samples, &cfg.fractions, cfg.seed);
 
+        // The pool runs in BOTH modes when workers > 1: SimOnly tasks are
+        // trivial, but routing them through the pool keeps the fan-out
+        // machinery on the determinism-test surface even without AOT
+        // artifacts on disk.
+        let mut pool = if n_workers > 1 {
+            Some(parallel::WorkerPool::start(
+                n_workers,
+                if real { Some(meta.manifest.clone()) } else { None },
+                meta,
+                cfg.sp,
+                cfg.batch,
+                &train,
+                &test,
+            )?)
+        } else {
+            None
+        };
+
         let mut global = GlobalModel::new(meta.init_params(cfg.seed));
         let transport = InMemTransport::new();
+        // FedAvg f64 accumulator, resized once and reused every round.
+        let mut scratch: Vec<f64> = Vec::new();
+        let mut perf = RunPerf {
+            workers: n_workers,
+            workers_perf: if pool.is_none() {
+                vec![WorkerPerf::default()]
+            } else {
+                Vec::new()
+            },
+            ..RunPerf::default()
+        };
 
         let mut devices: Vec<DeviceCtx> = shards
             .into_iter()
@@ -110,6 +159,7 @@ impl Runner {
             sp: cfg.sp,
             rounds: Vec::with_capacity(cfg.rounds as usize),
             final_params: Vec::new(),
+            perf: RunPerf::default(),
         };
 
         for round in 0..cfg.rounds {
@@ -196,89 +246,156 @@ impl Runner {
             }
 
             // ---- local training (paper Steps 2/3), per device
+            let t_train = std::time::Instant::now();
             let mut dev_rounds = Vec::with_capacity(devices.len());
             let mut loss_sum = 0.0f64;
             let mut loss_n = 0usize;
-            for (d, ctx) in devices.iter_mut().enumerate() {
-                let pair = PairTimeModel {
-                    device: cfg.device_profiles[d],
-                    edge: cfg.edge_profiles[ctx.edge],
-                    net: cfg.net,
-                };
-                let sim_seconds = pair.round_time(meta, cfg.sp, cfg.batch, ctx.shard.len());
-
-                let mut host_seconds = 0.0;
-                let mut loss_acc = 0.0f64;
-                let mut batches = 0usize;
-                if let Some(se) = &split_engine {
-                    let iter = BatchIter::new(&ctx.shard, cfg.batch, &mut ctx.rng);
-                    for idxs in iter {
-                        let (x, y) = train.batch(&idxs);
-                        let t0 = std::time::Instant::now();
-                        let out = se.train_batch(&mut ctx.dev, &mut ctx.srv, &x, &y)?;
-                        host_seconds += t0.elapsed().as_secs_f64();
-                        loss_acc += out.loss as f64;
-                        batches += 1;
+            if let Some(pool) = pool.as_mut() {
+                // Fan out: every DeviceCtx (RNG fork included) moves to a
+                // worker and back, so the per-device computation — and
+                // therefore the whole report — is bit-identical to the
+                // serial branch below.
+                let (restored, results) = pool.train_round(std::mem::take(&mut devices))?;
+                devices = restored;
+                for (d, ctx) in devices.iter_mut().enumerate() {
+                    let pair = PairTimeModel {
+                        device: cfg.device_profiles[d],
+                        edge: cfg.edge_profiles[ctx.edge],
+                        net: cfg.net,
+                    };
+                    let sim_seconds = pair.round_time(meta, cfg.sp, cfg.batch, ctx.shard.len());
+                    ctx.rounds_since_restart += 1;
+                    let r = &results[d];
+                    let loss = if r.batches > 0 && real {
+                        (r.loss_acc / r.batches as f64) as f32
+                    } else {
+                        f32::NAN
+                    };
+                    if loss.is_finite() {
+                        loss_sum += loss as f64;
+                        loss_n += 1;
                     }
-                } else {
-                    // SimOnly: no data is touched, so skip the O(shard)
-                    // shuffle entirely (perf pass: see EXPERIMENTS.md §Perf
-                    // L3).  Batch *count* is all the clock model needs; the
-                    // RNG stream is per-device and unused elsewhere here.
-                    batches = ctx.shard.len() / cfg.batch;
+                    dev_rounds.push(DeviceRound {
+                        device: d,
+                        round,
+                        edge: ctx.edge,
+                        sim_seconds,
+                        host_seconds: r.host_seconds,
+                        loss,
+                        migrated: moved[d],
+                        migration_sim_seconds: mig_sim[d],
+                        migration_host_seconds: mig_host[d],
+                        restart_penalty_sim_seconds: penalty[d],
+                        migration_failed: failed[d],
+                    });
                 }
-                ctx.rounds_since_restart += 1;
-                let loss = if batches > 0 && split_engine.is_some() {
-                    (loss_acc / batches as f64) as f32
-                } else {
-                    f32::NAN
-                };
-                if loss.is_finite() {
-                    loss_sum += loss as f64;
-                    loss_n += 1;
+            } else {
+                for (d, ctx) in devices.iter_mut().enumerate() {
+                    let pair = PairTimeModel {
+                        device: cfg.device_profiles[d],
+                        edge: cfg.edge_profiles[ctx.edge],
+                        net: cfg.net,
+                    };
+                    let sim_seconds = pair.round_time(meta, cfg.sp, cfg.batch, ctx.shard.len());
+
+                    let mut host_seconds = 0.0;
+                    let mut loss_acc = 0.0f64;
+                    let mut batches = 0usize;
+                    if let Some(se) = &split_engine {
+                        let iter = BatchIter::new(&ctx.shard, cfg.batch, &mut ctx.rng);
+                        for idxs in iter {
+                            let (x, y) = train.batch(&idxs);
+                            let t0 = std::time::Instant::now();
+                            let out = se.train_batch(&mut ctx.dev, &mut ctx.srv, &x, &y)?;
+                            host_seconds += t0.elapsed().as_secs_f64();
+                            loss_acc += out.loss as f64;
+                            batches += 1;
+                        }
+                    } else {
+                        // SimOnly: no data is touched, so skip the O(shard)
+                        // shuffle entirely (perf pass: see EXPERIMENTS.md §Perf
+                        // L3).  Batch *count* is all the clock model needs; the
+                        // RNG stream is per-device and unused elsewhere here.
+                        batches = ctx.shard.len() / cfg.batch;
+                    }
+                    ctx.rounds_since_restart += 1;
+                    let loss = if batches > 0 && split_engine.is_some() {
+                        (loss_acc / batches as f64) as f32
+                    } else {
+                        f32::NAN
+                    };
+                    if loss.is_finite() {
+                        loss_sum += loss as f64;
+                        loss_n += 1;
+                    }
+                    dev_rounds.push(DeviceRound {
+                        device: d,
+                        round,
+                        edge: ctx.edge,
+                        sim_seconds,
+                        host_seconds,
+                        loss,
+                        migrated: moved[d],
+                        migration_sim_seconds: mig_sim[d],
+                        migration_host_seconds: mig_host[d],
+                        restart_penalty_sim_seconds: penalty[d],
+                        migration_failed: failed[d],
+                    });
                 }
-                dev_rounds.push(DeviceRound {
-                    device: d,
-                    round,
-                    edge: ctx.edge,
-                    sim_seconds,
-                    host_seconds,
-                    loss,
-                    migrated: moved[d],
-                    migration_sim_seconds: mig_sim[d],
-                    migration_host_seconds: mig_host[d],
-                    restart_penalty_sim_seconds: penalty[d],
-                    migration_failed: failed[d],
-                });
+            }
+            let train_wall = t_train.elapsed().as_secs_f64();
+            perf.train_wall_seconds += train_wall;
+            if pool.is_none() {
+                // Serial path: one logical worker did everything.
+                perf.workers_perf[0].busy_seconds += train_wall;
+                perf.workers_perf[0].tasks += devices.len();
             }
 
             // ---- aggregation (paper Steps 4/5)
-            if split_engine.is_some() {
-                let contributions: Vec<Contribution> = devices
-                    .iter()
-                    .enumerate()
-                    .map(|(d, ctx)| Contribution {
-                        device: d,
-                        params: concat_params(&ctx.dev, &ctx.srv),
-                        weight: ctx.shard.len().max(1) as f64,
-                    })
-                    .collect();
-                global.aggregate(&contributions)?;
+            if real {
+                let t0 = std::time::Instant::now();
+                {
+                    // FedAvg straight over the (device, server) halves —
+                    // no per-device concat clone — with the chunked
+                    // reduction sharded across `workers` threads.
+                    let weights: Vec<f64> = devices
+                        .iter()
+                        .map(|ctx| ctx.shard.len().max(1) as f64)
+                        .collect();
+                    let halves: Vec<(&[f32], &[f32])> = devices
+                        .iter()
+                        .map(|ctx| (ctx.dev.params.as_slice(), ctx.srv.params.as_slice()))
+                        .collect();
+                    global.aggregate_halves(&halves, &weights, n_workers, &mut scratch)?;
+                }
                 for ctx in devices.iter_mut() {
                     ctx.dev.refresh_from_global(&global.params);
                     ctx.srv.refresh_from_global(&global.params);
                 }
+                perf.aggregate_seconds += t0.elapsed().as_secs_f64();
             }
             // SimOnly: parameters never change (no compute), so FedAvg is
             // a fixed point — skipping it is exact and saves ~2 ms x
             // rounds x runs on figure generation (EXPERIMENTS.md §Perf L3).
 
             // ---- evaluation (paper Step 6 -> next round; eval on demand)
-            let accuracy = match (&split_engine, cfg.eval_every) {
-                (Some(se), Some(every))
-                    if every > 0 && (round % every == every - 1 || round + 1 == cfg.rounds) =>
+            let accuracy = match cfg.eval_every {
+                Some(every)
+                    if real
+                        && every > 0
+                        && (round % every == every - 1 || round + 1 == cfg.rounds) =>
                 {
-                    Some(evaluate(se, &global.params, &test, cfg.batch)?)
+                    let t0 = std::time::Instant::now();
+                    let a = if let Some(pool) = pool.as_mut() {
+                        pool.evaluate(&global.params, test.len(), cfg.batch)?
+                    } else {
+                        let se = split_engine
+                            .as_ref()
+                            .expect("serial Real mode always has a split engine");
+                        evaluate(se, &global.params, &test, cfg.batch)?
+                    };
+                    perf.eval_seconds += t0.elapsed().as_secs_f64();
+                    Some(a)
                 }
                 _ => None,
             };
@@ -294,6 +411,14 @@ impl Runner {
                 devices: dev_rounds,
             });
         }
+        if let Some(pool) = pool.take() {
+            perf.workers_perf = pool.finish()?;
+        } else if let (Some(e), Some(s0)) = (engine, &engine_stats0) {
+            let d = e.stats().since(s0);
+            perf.workers_perf[0].engine_executions = d.executions;
+            perf.workers_perf[0].engine_exec_seconds = d.exec_seconds;
+        }
+        report.perf = perf;
         report.final_params = global.params;
         Ok(report)
     }

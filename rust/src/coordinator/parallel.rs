@@ -1,0 +1,511 @@
+//! Parallel round execution: a persistent worker pool for the in-process
+//! [`Runner`](super::Runner) (EXPERIMENTS.md §Perf L4).
+//!
+//! Devices are independent between the round's mobility boundary and the
+//! FedAvg barrier, so each round fans the per-device training tasks out
+//! over `workers` threads.  The PJRT client is not `Send`, so — exactly
+//! like the actors in [`super::distributed`] — every worker thread owns a
+//! *private* [`Engine`] (and `SplitEngine`), created and warmed up inside
+//! the thread at pool startup.  Workers are persistent across rounds:
+//! tearing the engines down per round would recompile the HLO artifacts
+//! every round.
+//!
+//! Determinism: all round state a device needs (its `DeviceCtx`, including
+//! the per-device forked `Rng`) *moves* through the channel to whichever
+//! worker executes it and moves back afterwards, so the computation per
+//! device is identical to the serial path — batch order, update math and
+//! RNG stream included — regardless of worker count or completion order.
+//! The pool reassembles results in device order before the caller touches
+//! them.  Only measured host times differ between runs.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::data::{BatchIter, SyntheticCifar};
+use crate::error::{Error, Result};
+use crate::manifest::Manifest;
+use crate::metrics::WorkerPerf;
+use crate::model::ModelMeta;
+use crate::runtime::Engine;
+use crate::split::{accuracy_from_logits, SplitEngine};
+
+use super::DeviceCtx;
+
+/// Per-device training output, in the units the serial loop produces.
+pub(crate) struct TrainResult {
+    /// Sum of batch losses (mean is `loss_acc / batches`).
+    pub(crate) loss_acc: f64,
+    pub(crate) batches: usize,
+    /// Host seconds inside `train_batch` (PJRT work) for this device.
+    pub(crate) host_seconds: f64,
+}
+
+struct TrainTask {
+    device: usize,
+    ctx: DeviceCtx,
+}
+
+struct TrainDone {
+    device: usize,
+    ctx: DeviceCtx,
+    result: TrainResult,
+    worker: usize,
+    busy_seconds: f64,
+}
+
+struct EvalDone {
+    worker: usize,
+    busy_seconds: f64,
+    /// `(batch_start, correct_weighted)` per evaluated test batch.
+    correct: Vec<(usize, f64)>,
+}
+
+enum Job {
+    Train(Box<TrainTask>),
+    Eval {
+        params: Arc<Vec<f32>>,
+        starts: Vec<usize>,
+    },
+}
+
+enum Reply {
+    Ready {
+        worker: usize,
+        result: std::result::Result<(), String>,
+    },
+    Train(Box<TrainDone>),
+    Eval(EvalDone),
+    Err {
+        worker: usize,
+        msg: String,
+    },
+    Stats {
+        worker: usize,
+        engine_executions: u64,
+        engine_exec_seconds: f64,
+    },
+}
+
+/// Everything a worker needs to stand alone; moved into its thread.
+struct WorkerCfg {
+    worker: usize,
+    /// `Some` in Real mode — the worker builds its own engine from it.
+    manifest: Option<Arc<Manifest>>,
+    meta: ModelMeta,
+    sp: usize,
+    batch: usize,
+    train: SyntheticCifar,
+    test: SyntheticCifar,
+}
+
+/// A pool of persistent, engine-owning worker threads.
+///
+/// Static device→worker assignment (`device % workers`) keeps dispatch
+/// deterministic and allocation-free; the round barrier is the caller
+/// collecting exactly one reply per task.
+pub(crate) struct WorkerPool {
+    n: usize,
+    job_txs: Vec<Sender<Job>>,
+    reply_rx: Receiver<Reply>,
+    handles: Vec<JoinHandle<()>>,
+    perf: Vec<WorkerPerf>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads and block until every one has built (and
+    /// in Real mode warmed up) its private engine, so compile time never
+    /// pollutes the timed rounds.
+    pub(crate) fn start(
+        workers: usize,
+        manifest: Option<Arc<Manifest>>,
+        meta: &ModelMeta,
+        sp: usize,
+        batch: usize,
+        train: &SyntheticCifar,
+        test: &SyntheticCifar,
+    ) -> Result<WorkerPool> {
+        let (reply_tx, reply_rx) = channel::<Reply>();
+        let mut job_txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = channel::<Job>();
+            let wcfg = WorkerCfg {
+                worker: w,
+                manifest: manifest.clone(),
+                meta: meta.clone(),
+                sp,
+                batch,
+                train: train.clone(),
+                test: test.clone(),
+            };
+            let replies = reply_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("fedfly-worker-{w}"))
+                .spawn(move || worker_main(wcfg, rx, replies))?;
+            job_txs.push(tx);
+            handles.push(handle);
+        }
+        drop(reply_tx);
+        let pool = WorkerPool {
+            n: workers,
+            job_txs,
+            reply_rx,
+            handles,
+            perf: (0..workers)
+                .map(|w| WorkerPerf {
+                    worker: w,
+                    ..WorkerPerf::default()
+                })
+                .collect(),
+        };
+        let mut ready = 0;
+        while ready < workers {
+            match pool.reply_rx.recv() {
+                Ok(Reply::Ready { result: Ok(()), .. }) => ready += 1,
+                Ok(Reply::Ready {
+                    worker,
+                    result: Err(msg),
+                }) => {
+                    return Err(Error::other(format!(
+                        "worker {worker} failed to start: {msg}"
+                    )))
+                }
+                Ok(_) => {
+                    return Err(Error::other(
+                        "worker pool: unexpected reply during startup",
+                    ))
+                }
+                Err(_) => return Err(Error::other("worker pool: worker died during startup")),
+            }
+        }
+        Ok(pool)
+    }
+
+    /// Train every device for one round; returns the contexts (in device
+    /// order, exactly as passed in) plus per-device results.
+    pub(crate) fn train_round(
+        &mut self,
+        ctxs: Vec<DeviceCtx>,
+    ) -> Result<(Vec<DeviceCtx>, Vec<TrainResult>)> {
+        let n_dev = ctxs.len();
+        let t0 = Instant::now();
+        for (device, ctx) in ctxs.into_iter().enumerate() {
+            self.job_txs[device % self.n]
+                .send(Job::Train(Box::new(TrainTask { device, ctx })))
+                .map_err(|_| Error::other("worker pool: worker died"))?;
+        }
+        let mut slots: Vec<Option<(DeviceCtx, TrainResult)>> =
+            (0..n_dev).map(|_| None).collect();
+        let mut busy = vec![0.0f64; self.n];
+        for _ in 0..n_dev {
+            match self
+                .reply_rx
+                .recv()
+                .map_err(|_| Error::other("worker pool: reply channel closed"))?
+            {
+                Reply::Train(done) => {
+                    let done = *done;
+                    busy[done.worker] += done.busy_seconds;
+                    self.perf[done.worker].busy_seconds += done.busy_seconds;
+                    self.perf[done.worker].tasks += 1;
+                    slots[done.device] = Some((done.ctx, done.result));
+                }
+                Reply::Err { worker, msg } => {
+                    return Err(Error::other(format!("worker {worker}: {msg}")))
+                }
+                _ => return Err(Error::other("worker pool: unexpected reply")),
+            }
+        }
+        // Barrier accounting: how long each worker sat idle while the
+        // slowest one finished the round.
+        let wall = t0.elapsed().as_secs_f64();
+        for w in 0..self.n {
+            self.perf[w].barrier_wait_seconds += (wall - busy[w]).max(0.0);
+        }
+        let mut out_ctxs = Vec::with_capacity(n_dev);
+        let mut results = Vec::with_capacity(n_dev);
+        for slot in slots {
+            let (ctx, res) =
+                slot.ok_or_else(|| Error::other("worker pool: missing device result"))?;
+            out_ctxs.push(ctx);
+            results.push(res);
+        }
+        Ok((out_ctxs, results))
+    }
+
+    /// Top-1 accuracy over the test set, batches fanned out round-robin.
+    ///
+    /// Per-batch weighted-correct terms are summed in batch order, so the
+    /// f64 total is bit-identical to the serial [`super::evaluate`].
+    pub(crate) fn evaluate(
+        &mut self,
+        params: &[f32],
+        test_len: usize,
+        batch: usize,
+    ) -> Result<f64> {
+        let n = (test_len / batch) * batch;
+        if n == 0 {
+            return Err(Error::Config("test set smaller than one batch".into()));
+        }
+        let params = Arc::new(params.to_vec());
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); self.n];
+        for (i, start) in (0..n).step_by(batch).enumerate() {
+            buckets[i % self.n].push(start);
+        }
+        let t0 = Instant::now();
+        let mut expected = 0;
+        for (w, starts) in buckets.into_iter().enumerate() {
+            if starts.is_empty() {
+                continue;
+            }
+            self.job_txs[w]
+                .send(Job::Eval {
+                    params: params.clone(),
+                    starts,
+                })
+                .map_err(|_| Error::other("worker pool: worker died"))?;
+            expected += 1;
+        }
+        let mut per_batch = vec![0.0f64; n / batch];
+        let mut busy = vec![0.0f64; self.n];
+        for _ in 0..expected {
+            match self
+                .reply_rx
+                .recv()
+                .map_err(|_| Error::other("worker pool: reply channel closed"))?
+            {
+                Reply::Eval(done) => {
+                    busy[done.worker] += done.busy_seconds;
+                    self.perf[done.worker].busy_seconds += done.busy_seconds;
+                    self.perf[done.worker].tasks += 1;
+                    for (start, c) in done.correct {
+                        per_batch[start / batch] = c;
+                    }
+                }
+                Reply::Err { worker, msg } => {
+                    return Err(Error::other(format!("worker {worker}: {msg}")))
+                }
+                _ => return Err(Error::other("worker pool: unexpected reply")),
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        for w in 0..self.n {
+            self.perf[w].barrier_wait_seconds += (wall - busy[w]).max(0.0);
+        }
+        let mut correct = 0.0f64;
+        for &c in &per_batch {
+            correct += c;
+        }
+        Ok(correct / n as f64)
+    }
+
+    /// Shut the pool down and collect the per-worker accounting (engine
+    /// execution counters come back with each worker's final message).
+    pub(crate) fn finish(mut self) -> Result<Vec<WorkerPerf>> {
+        self.job_txs.clear(); // closes the job channels -> workers drain out
+        let mut perf = std::mem::take(&mut self.perf);
+        let mut got = 0;
+        while got < perf.len() {
+            match self.reply_rx.recv() {
+                Ok(Reply::Stats {
+                    worker,
+                    engine_executions,
+                    engine_exec_seconds,
+                }) => {
+                    perf[worker].engine_executions = engine_executions;
+                    perf[worker].engine_exec_seconds = engine_exec_seconds;
+                    got += 1;
+                }
+                // Stale round replies from an aborted run: ignore.
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        for h in self.handles.drain(..) {
+            h.join()
+                .map_err(|_| Error::other("worker pool: worker thread panicked"))?;
+        }
+        Ok(perf)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Error-path teardown: close job channels and wait the threads
+        // out so no worker outlives the run that spawned it.
+        self.job_txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(wcfg: WorkerCfg, jobs: Receiver<Job>, replies: Sender<Reply>) {
+    let engine = match &wcfg.manifest {
+        Some(m) => match Engine::new(m.clone()) {
+            Ok(e) => Some(e),
+            Err(e) => {
+                let _ = replies.send(Reply::Ready {
+                    worker: wcfg.worker,
+                    result: Err(e.to_string()),
+                });
+                return;
+            }
+        },
+        None => None,
+    };
+    let se = match &engine {
+        Some(e) => {
+            match SplitEngine::new(e, wcfg.meta.clone(), wcfg.batch)
+                .and_then(|se| se.warm_up(wcfg.sp).map(|()| se))
+            {
+                Ok(se) => Some(se),
+                Err(e) => {
+                    let _ = replies.send(Reply::Ready {
+                        worker: wcfg.worker,
+                        result: Err(e.to_string()),
+                    });
+                    return;
+                }
+            }
+        }
+        None => None,
+    };
+    if replies
+        .send(Reply::Ready {
+            worker: wcfg.worker,
+            result: Ok(()),
+        })
+        .is_err()
+    {
+        return;
+    }
+
+    while let Ok(job) = jobs.recv() {
+        match job {
+            Job::Train(task) => {
+                let t0 = Instant::now();
+                match run_train(&wcfg, se.as_ref(), *task) {
+                    Ok(mut done) => {
+                        done.worker = wcfg.worker;
+                        done.busy_seconds = t0.elapsed().as_secs_f64();
+                        if replies.send(Reply::Train(Box::new(done))).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = replies.send(Reply::Err {
+                            worker: wcfg.worker,
+                            msg: e.to_string(),
+                        });
+                        return;
+                    }
+                }
+            }
+            Job::Eval { params, starts } => {
+                let t0 = Instant::now();
+                let res = match &se {
+                    Some(se) => run_eval(&wcfg, se, &params, &starts),
+                    None => Err(Error::Config(
+                        "evaluation requires Real-mode workers".into(),
+                    )),
+                };
+                match res {
+                    Ok(correct) => {
+                        let done = EvalDone {
+                            worker: wcfg.worker,
+                            busy_seconds: t0.elapsed().as_secs_f64(),
+                            correct,
+                        };
+                        if replies.send(Reply::Eval(done)).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = replies.send(Reply::Err {
+                            worker: wcfg.worker,
+                            msg: e.to_string(),
+                        });
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    let (engine_executions, engine_exec_seconds) = engine
+        .as_ref()
+        .map(|e| {
+            let s = e.stats();
+            (s.executions, s.exec_seconds)
+        })
+        .unwrap_or((0, 0.0));
+    let _ = replies.send(Reply::Stats {
+        worker: wcfg.worker,
+        engine_executions,
+        engine_exec_seconds,
+    });
+}
+
+/// One device's round of local training — the exact computation the
+/// serial loop in [`super::Runner::run`] performs, batch order and RNG
+/// stream included.
+fn run_train(
+    wcfg: &WorkerCfg,
+    se: Option<&SplitEngine<'_>>,
+    task: TrainTask,
+) -> Result<TrainDone> {
+    let TrainTask { device, mut ctx } = task;
+    let mut host_seconds = 0.0;
+    let mut loss_acc = 0.0f64;
+    let mut batches = 0usize;
+    if let Some(se) = se {
+        let iter = BatchIter::new(&ctx.shard, wcfg.batch, &mut ctx.rng);
+        for idxs in iter {
+            let (x, y) = wcfg.train.batch(&idxs);
+            let t0 = Instant::now();
+            let out = se.train_batch(&mut ctx.dev, &mut ctx.srv, &x, &y)?;
+            host_seconds += t0.elapsed().as_secs_f64();
+            loss_acc += out.loss as f64;
+            batches += 1;
+        }
+    } else {
+        // SimOnly: mirror the serial path — batch *count* only, RNG
+        // untouched (EXPERIMENTS.md §Perf L3).
+        batches = ctx.shard.len() / wcfg.batch;
+    }
+    Ok(TrainDone {
+        device,
+        ctx,
+        result: TrainResult {
+            loss_acc,
+            batches,
+            host_seconds,
+        },
+        worker: 0,
+        busy_seconds: 0.0,
+    })
+}
+
+/// Accuracy terms for this worker's share of the test batches.
+fn run_eval(
+    wcfg: &WorkerCfg,
+    se: &SplitEngine<'_>,
+    params: &[f32],
+    starts: &[usize],
+) -> Result<Vec<(usize, f64)>> {
+    let classes = se.meta().manifest.num_classes;
+    let mut out = Vec::with_capacity(starts.len());
+    for &start in starts {
+        let idxs: Vec<usize> = (start..start + wcfg.batch).collect();
+        let (x, y) = wcfg.test.batch(&idxs);
+        let logits = se.eval_logits(params, &x)?;
+        out.push((
+            start,
+            accuracy_from_logits(&logits, &y, classes) * wcfg.batch as f64,
+        ));
+    }
+    Ok(out)
+}

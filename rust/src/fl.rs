@@ -2,7 +2,7 @@
 //! vectors — the central server's Step 5 in the FedFly protocol.
 
 use crate::error::{Error, Result};
-use crate::tensor::weighted_average;
+use crate::tensor::{weighted_average_into, weighted_average_split_into};
 
 /// One device's contribution to a round: its full flat parameter vector
 /// (device half ++ server half) and its aggregation weight (sample count).
@@ -28,6 +28,18 @@ impl GlobalModel {
     /// FedAvg step: replace the global parameters with the sample-weighted
     /// average of the contributions and advance the round counter.
     pub fn aggregate(&mut self, contributions: &[Contribution]) -> Result<()> {
+        self.aggregate_with(contributions, 1, &mut Vec::new())
+    }
+
+    /// [`GlobalModel::aggregate`] with an explicit reduction worker count
+    /// and a caller-owned f64 scratch buffer reused across rounds.  Output
+    /// is bit-identical for every `workers` value.
+    pub fn aggregate_with(
+        &mut self,
+        contributions: &[Contribution],
+        workers: usize,
+        scratch: &mut Vec<f64>,
+    ) -> Result<()> {
         if contributions.is_empty() {
             return Err(Error::other("aggregate: no contributions"));
         }
@@ -42,7 +54,42 @@ impl GlobalModel {
         }
         let vecs: Vec<&[f32]> = contributions.iter().map(|c| c.params.as_slice()).collect();
         let weights: Vec<f64> = contributions.iter().map(|c| c.weight).collect();
-        self.params = weighted_average(&vecs, &weights)?;
+        let mut out = std::mem::take(&mut self.params);
+        let res = weighted_average_into(&mut out, &vecs, &weights, workers, scratch);
+        self.params = out;
+        res?;
+        self.round += 1;
+        Ok(())
+    }
+
+    /// FedAvg over *split* contributions: each source is the pair
+    /// `(device_half, server_half)` exactly as it lives on a device/edge,
+    /// in device order, so the coordinator never materialises a
+    /// concatenated per-device clone.  Bit-identical to
+    /// [`GlobalModel::aggregate`] over the concatenations.
+    pub fn aggregate_halves(
+        &mut self,
+        halves: &[(&[f32], &[f32])],
+        weights: &[f64],
+        workers: usize,
+        scratch: &mut Vec<f64>,
+    ) -> Result<()> {
+        if halves.is_empty() {
+            return Err(Error::other("aggregate: no contributions"));
+        }
+        for (d, (dev, srv)) in halves.iter().enumerate() {
+            if dev.len() + srv.len() != self.params.len() {
+                return Err(Error::Shape {
+                    expected: vec![self.params.len()],
+                    got: vec![dev.len() + srv.len()],
+                    context: format!("contribution from device {d}"),
+                });
+            }
+        }
+        let mut out = std::mem::take(&mut self.params);
+        let res = weighted_average_split_into(&mut out, halves, weights, workers, scratch);
+        self.params = out;
+        res?;
         self.round += 1;
         Ok(())
     }
@@ -90,6 +137,68 @@ mod tests {
         let c: Vec<Contribution> = (0..4).map(|d| contrib(d, 7.0, 16, 1.0 + d as f64)).collect();
         g.aggregate(&c).unwrap();
         assert!(g.params.iter().all(|&x| (x - 7.0).abs() < 1e-6));
+    }
+
+    /// aggregate_halves over (device, server) pairs is bit-identical to
+    /// aggregate over the concatenations, at any worker count.
+    #[test]
+    fn aggregate_halves_matches_concat_aggregate() {
+        use crate::util::Rng;
+        let mut r = Rng::new(42);
+        let n = 1000;
+        let nd = 371;
+        let devs: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..nd).map(|_| r.gaussian() as f32).collect())
+            .collect();
+        let srvs: Vec<Vec<f32>> = (0..4)
+            .map(|_| (0..n - nd).map(|_| r.gaussian() as f32).collect())
+            .collect();
+        let weights = [1.0, 3.0, 2.0, 5.0];
+
+        let mut via_concat = GlobalModel::new(vec![0.0; n]);
+        let contributions: Vec<Contribution> = devs
+            .iter()
+            .zip(&srvs)
+            .enumerate()
+            .map(|(d, (dv, sv))| Contribution {
+                device: d,
+                params: dv.iter().chain(sv.iter()).copied().collect(),
+                weight: weights[d],
+            })
+            .collect();
+        via_concat.aggregate(&contributions).unwrap();
+
+        let halves: Vec<(&[f32], &[f32])> = devs
+            .iter()
+            .zip(&srvs)
+            .map(|(d, s)| (d.as_slice(), s.as_slice()))
+            .collect();
+        let mut scratch = Vec::new();
+        for workers in [1usize, 2, 4] {
+            let mut g = GlobalModel::new(vec![0.0; n]);
+            g.aggregate_halves(&halves, &weights, workers, &mut scratch)
+                .unwrap();
+            assert_eq!(g.round, 1);
+            for (a, b) in g.params.iter().zip(&via_concat.params) {
+                assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn aggregate_halves_rejects_bad_shapes() {
+        let mut g = GlobalModel::new(vec![0.0; 4]);
+        let d = [1.0f32, 2.0];
+        let s = [3.0f32];
+        let mut scratch = Vec::new();
+        let err = g
+            .aggregate_halves(&[(&d, &s)], &[1.0], 1, &mut scratch)
+            .unwrap_err();
+        assert!(matches!(err, Error::Shape { .. }));
+        assert!(g
+            .aggregate_halves(&[], &[], 1, &mut scratch)
+            .is_err());
+        assert_eq!(g.round, 0, "failed aggregation must not advance the round");
     }
 
     #[test]

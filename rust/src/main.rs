@@ -23,7 +23,7 @@ fn usage() -> ! {
          commands:\n\
            info                         manifest / artifact summary\n\
            train [--rounds N] [--sp K] [--batch B] [--strategy fedfly|restart]\n\
-                 [--move-at FRAC] [--samples N] [--sim] [--seed S]\n\
+                 [--move-at FRAC] [--samples N] [--sim] [--seed S] [--workers W]\n\
            fig3a | fig3b | fig3c        paper timing figures (simulated testbed)\n\
            fig4 [--frac F] [--rounds N] paper accuracy figure (real training)\n\
            overhead                     migration overhead table\n\
@@ -250,6 +250,7 @@ fn train(args: &Args) -> fedfly::Result<()> {
     cfg.sp = args.get("sp", 2usize);
     cfg.batch = args.get("batch", 16usize);
     cfg.seed = args.get("seed", 7u64);
+    cfg.workers = args.get("workers", 1usize);
     cfg.train_samples = args.get("samples", 640usize);
     cfg.test_samples = cfg.train_samples / 4;
     if args.has("sim") {
@@ -265,7 +266,9 @@ fn train(args: &Args) -> fedfly::Result<()> {
     }
 
     let meta = experiments::load_meta()?;
-    let engine = if cfg.exec == ExecMode::Real {
+    // With workers > 1 every pool worker builds its own engine, so the
+    // main thread does not need one.
+    let engine = if cfg.exec == ExecMode::Real && cfg.workers <= 1 {
         Some(Engine::new(meta.manifest.clone())?)
     } else {
         None
@@ -283,6 +286,22 @@ fn train(args: &Args) -> fedfly::Result<()> {
         println!(
             "device {}: {:.1}s sim/round effective, {} moves, migration {:.3}s host",
             s.device, s.effective_time_per_round, s.moves, s.total_migration_host
+        );
+    }
+    let p = &report.perf;
+    println!(
+        "perf: {} worker(s); train wall {:.3}s, fedavg {:.3}s, eval {:.3}s",
+        p.workers, p.train_wall_seconds, p.aggregate_seconds, p.eval_seconds
+    );
+    for w in &p.workers_perf {
+        println!(
+            "  worker {}: busy {:.3}s, barrier wait {:.3}s, {} tasks, {} HLO execs ({:.3}s)",
+            w.worker,
+            w.busy_seconds,
+            w.barrier_wait_seconds,
+            w.tasks,
+            w.engine_executions,
+            w.engine_exec_seconds
         );
     }
     Ok(())

@@ -37,6 +37,42 @@ pub struct RoundRecord {
     pub devices: Vec<DeviceRound>,
 }
 
+/// One worker thread's account of a run (EXPERIMENTS.md §Perf L4).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerPerf {
+    pub worker: usize,
+    /// Host seconds spent executing tasks (training/eval work).
+    pub busy_seconds: f64,
+    /// Host seconds the round barrier waited on *other* workers after
+    /// this one went idle — load imbalance shows up here.
+    pub barrier_wait_seconds: f64,
+    /// Tasks (device-rounds + eval shards) executed.
+    pub tasks: usize,
+    /// HLO executions by this worker's private engine.
+    pub engine_executions: u64,
+    /// Host seconds inside PJRT for those executions.
+    pub engine_exec_seconds: f64,
+}
+
+/// Wall-clock accounting for one run, split by pipeline stage.
+///
+/// Everything here is *measured host time* and therefore not part of the
+/// deterministic report surface (see the determinism tests, which compare
+/// all fields except `host_seconds`-like ones).
+#[derive(Clone, Debug, Default)]
+pub struct RunPerf {
+    /// Worker threads the run was configured with (1 = serial path).
+    pub workers: usize,
+    /// Wall seconds in the per-round device-training sections.
+    pub train_wall_seconds: f64,
+    /// Wall seconds in the FedAvg reductions.
+    pub aggregate_seconds: f64,
+    /// Wall seconds in evaluation.
+    pub eval_seconds: f64,
+    /// Per-worker breakdown (one entry for the serial path).
+    pub workers_perf: Vec<WorkerPerf>,
+}
+
 /// A whole training run.
 #[derive(Clone, Debug, Default)]
 pub struct RunReport {
@@ -46,6 +82,9 @@ pub struct RunReport {
     /// Final global parameter vector (for state-equivalence tests; empty
     /// if the producer does not track parameters).
     pub final_params: Vec<f32>,
+    /// Host-time accounting (non-deterministic; excluded from replay
+    /// equivalence).
+    pub perf: RunPerf,
 }
 
 /// Per-device summary over a run (the Fig-3 quantity).
@@ -200,6 +239,43 @@ impl RunReport {
                         .collect(),
                 ),
             ),
+            (
+                "perf",
+                json::obj(vec![
+                    ("workers", json::num(self.perf.workers as f64)),
+                    ("train_wall_seconds", json::num(self.perf.train_wall_seconds)),
+                    ("aggregate_seconds", json::num(self.perf.aggregate_seconds)),
+                    ("eval_seconds", json::num(self.perf.eval_seconds)),
+                    (
+                        "workers_perf",
+                        json::arr(
+                            self.perf
+                                .workers_perf
+                                .iter()
+                                .map(|w| {
+                                    json::obj(vec![
+                                        ("worker", json::num(w.worker as f64)),
+                                        ("busy_seconds", json::num(w.busy_seconds)),
+                                        (
+                                            "barrier_wait_seconds",
+                                            json::num(w.barrier_wait_seconds),
+                                        ),
+                                        ("tasks", json::num(w.tasks as f64)),
+                                        (
+                                            "engine_executions",
+                                            json::num(w.engine_executions as f64),
+                                        ),
+                                        (
+                                            "engine_exec_seconds",
+                                            json::num(w.engine_exec_seconds),
+                                        ),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
         ])
     }
 }
@@ -247,6 +323,11 @@ mod tests {
             sp: 2,
             rounds: vec![mk(0, false, 0.0), mk(1, true, 0.0), mk(2, false, 30.0)],
             final_params: Vec::new(),
+            perf: RunPerf {
+                workers: 2,
+                workers_perf: vec![WorkerPerf::default(), WorkerPerf::default()],
+                ..RunPerf::default()
+            },
         }
     }
 
@@ -287,5 +368,7 @@ mod tests {
         let back = json::parse(&text).unwrap();
         assert_eq!(back.get_str("strategy").unwrap(), "fedfly");
         assert_eq!(back.get_usize("rounds").unwrap(), 3);
+        let perf = back.get("perf").unwrap();
+        assert_eq!(perf.get_usize("workers").unwrap(), 2);
     }
 }

@@ -47,16 +47,17 @@ pub struct Checkpoint {
 }
 
 impl Checkpoint {
-    /// Approximate wire size in bytes.
+    /// Exact wire size in bytes of [`encode`]'s output — the migration
+    /// time model in `mobility`/`netsim` charges transfer cost per byte,
+    /// so this must match the codec field for field.
     pub fn wire_bytes(&self) -> usize {
-        4 + 4
-            + 8 * 4
-            + 4 * 2
-            + 4
-            + (self.server_params.len() + self.server_momentum.len() + self.grad_smashed.len())
-                * 4
-            + 8 * 3
-            + 8 * 4
+        // magic + version + device_id + sp + round + epoch + batch_idx + loss
+        4 + 4 + 8 + 4 + 8 + 8 + 8 + 4
+            // three u64-length-prefixed f32 payloads
+            + 3 * 8
+            + 4 * (self.server_params.len() + self.server_momentum.len() + self.grad_smashed.len())
+            // rng state + trailing crc32
+            + 4 * 8
             + 4
     }
 }
@@ -252,11 +253,24 @@ mod tests {
     }
 
     #[test]
-    fn wire_bytes_close_to_actual() {
-        let ck = sample(6, 10_000);
-        let actual = encode(&ck).len();
-        let est = ck.wire_bytes();
-        assert!((actual as i64 - est as i64).unsigned_abs() < 128);
+    fn wire_bytes_is_exact() {
+        for n in [0usize, 1, 63, 10_000] {
+            let ck = sample(6, n);
+            assert_eq!(
+                encode(&ck).len(),
+                ck.wire_bytes(),
+                "wire_bytes drifted from encode() at n={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_wire_bytes_exact_random() {
+        use crate::util::prop::forall;
+        forall(30, |r| {
+            let ck = sample(r.next_u64(), r.below(5000));
+            assert_eq!(encode(&ck).len(), ck.wire_bytes());
+        });
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! so the overhead table can contrast measured (localhost) vs simulated
 //! (75 Mbps testbed) costs.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -30,14 +30,28 @@ pub trait Transport {
 // In-memory transport (single-process coordinator)
 
 /// Mailbox-per-edge in-memory transport.
+///
+/// Each `(dest, device)` mailbox is a FIFO queue: a second send before the
+/// first is received queues behind it rather than silently clobbering an
+/// unreceived checkpoint (which would lose server-side optimizer state —
+/// exactly the loss FedFly exists to prevent).
 #[derive(Default)]
 pub struct InMemTransport {
-    mailboxes: Mutex<HashMap<(usize, u64), Checkpoint>>,
+    mailboxes: Mutex<HashMap<(usize, u64), VecDeque<Checkpoint>>>,
 }
 
 impl InMemTransport {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Checkpoints queued for `device` at edge `dest`.
+    pub fn pending(&self, dest: usize, device: u64) -> usize {
+        self.mailboxes
+            .lock()
+            .unwrap()
+            .get(&(dest, device))
+            .map_or(0, |q| q.len())
     }
 }
 
@@ -51,12 +65,22 @@ impl Transport for InMemTransport {
         self.mailboxes
             .lock()
             .unwrap()
-            .insert((dest, decoded.device_id), decoded);
+            .entry((dest, decoded.device_id))
+            .or_default()
+            .push_back(decoded);
         Ok(t0.elapsed().as_secs_f64())
     }
 
     fn receive(&self, dest: usize, device: u64) -> Result<Option<Checkpoint>> {
-        Ok(self.mailboxes.lock().unwrap().remove(&(dest, device)))
+        let mut boxes = self.mailboxes.lock().unwrap();
+        let Some(q) = boxes.get_mut(&(dest, device)) else {
+            return Ok(None);
+        };
+        let ck = q.pop_front();
+        if q.is_empty() {
+            boxes.remove(&(dest, device));
+        }
+        Ok(ck)
     }
 }
 
@@ -185,6 +209,24 @@ mod tests {
         assert!(t.receive(1, 7).unwrap().is_none());
         // wrong edge is empty
         assert!(t.receive(0, 7).unwrap().is_none());
+    }
+
+    /// Regression: a second send for the same (dest, device) key used to
+    /// silently overwrite an unreceived checkpoint.  Now it queues FIFO.
+    #[test]
+    fn inmem_queues_instead_of_clobbering() {
+        let t = InMemTransport::new();
+        let first = ck(7, 10);
+        let mut second = ck(7, 10);
+        second.round = 51;
+        second.loss = 9.0;
+        t.send(1, &first).unwrap();
+        t.send(1, &second).unwrap();
+        assert_eq!(t.pending(1, 7), 2);
+        assert_eq!(t.receive(1, 7).unwrap().unwrap(), first);
+        assert_eq!(t.receive(1, 7).unwrap().unwrap(), second);
+        assert!(t.receive(1, 7).unwrap().is_none());
+        assert_eq!(t.pending(1, 7), 0);
     }
 
     #[test]

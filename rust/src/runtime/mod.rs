@@ -28,6 +28,19 @@ pub struct EngineStats {
     pub exec_seconds: f64,
 }
 
+impl EngineStats {
+    /// The delta accumulated since an earlier snapshot — lets a caller
+    /// attribute engine work to one section of a run (e.g. per-worker
+    /// accounting in `RunPerf`) without resetting the counters.
+    pub fn since(&self, earlier: &EngineStats) -> EngineStats {
+        EngineStats {
+            compiles: self.compiles.saturating_sub(earlier.compiles),
+            executions: self.executions.saturating_sub(earlier.executions),
+            exec_seconds: (self.exec_seconds - earlier.exec_seconds).max(0.0),
+        }
+    }
+}
+
 /// A PJRT client plus a lazily-populated executable cache.
 pub struct Engine {
     client: xla::PjRtClient,
@@ -144,6 +157,20 @@ mod tests {
     fn engine() -> Option<Engine> {
         let m = Manifest::load_default().ok()?;
         Engine::new(Arc::new(m)).ok()
+    }
+
+    #[test]
+    fn stats_since_is_a_delta() {
+        let a = EngineStats { compiles: 2, executions: 10, exec_seconds: 1.5 };
+        let b = EngineStats { compiles: 3, executions: 25, exec_seconds: 4.0 };
+        let d = b.since(&a);
+        assert_eq!(d.compiles, 1);
+        assert_eq!(d.executions, 15);
+        assert!((d.exec_seconds - 2.5).abs() < 1e-12);
+        // snapshots taken out of order clamp to zero rather than wrap
+        let z = a.since(&b);
+        assert_eq!(z.executions, 0);
+        assert_eq!(z.exec_seconds, 0.0);
     }
 
     #[test]

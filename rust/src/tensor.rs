@@ -100,15 +100,87 @@ pub fn axpy(out: &mut [f32], w: f32, x: &[f32]) {
     }
 }
 
-/// Weighted average of flat parameter vectors: `Σ wᵢ·xᵢ / Σ wᵢ`.
+/// `acc += w * x` with f64 accumulation (FedAvg's inner reduction step).
+fn axpy_f64(acc: &mut [f64], w: f64, x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, &v) in acc.iter_mut().zip(x) {
+        *a += w * v as f64;
+    }
+}
+
+/// Block size for the chunked reduction: 8 Ki elements keeps one f64
+/// scratch block plus one f32 source block per device comfortably in L2
+/// while amortising the per-block loop overhead.
+const REDUCE_CHUNK: usize = 8192;
+
+/// Below this length a parallel split costs more than it saves.
+const PAR_MIN: usize = 2 * REDUCE_CHUNK;
+
+/// Reduce one contiguous output range `[offset, offset + acc.len())` of the
+/// logical concatenation `device_half ++ server_half`.
 ///
-/// This is FedAvg's core reduction; weights are sample counts.
-pub fn weighted_average(vectors: &[&[f32]], weights: &[f64]) -> Result<Vec<f32>> {
-    if vectors.is_empty() || vectors.len() != weights.len() {
+/// Per REDUCE_CHUNK-sized block: zero the f64 scratch, accumulate every
+/// source in order (axpy-style), then downcast to f32.  The per-*element*
+/// operation sequence — start at 0.0, add `(wᵢ/Σw)·xᵢ` in source order,
+/// round once to f32 — is identical for every chunking and worker count,
+/// so results are bit-identical to the fully serial reduction.
+fn reduce_range(
+    acc: &mut [f64],
+    out: &mut [f32],
+    halves: &[(&[f32], &[f32])],
+    wn: &[f64],
+    nd: usize,
+    offset: usize,
+) {
+    debug_assert_eq!(acc.len(), out.len());
+    let mut lo = 0;
+    while lo < acc.len() {
+        let hi = (lo + REDUCE_CHUNK).min(acc.len());
+        let (g_lo, g_hi) = (offset + lo, offset + hi);
+        let block = &mut acc[lo..hi];
+        block.fill(0.0);
+        for ((dev, srv), &w) in halves.iter().zip(wn) {
+            if g_lo < nd {
+                let end = g_hi.min(nd);
+                axpy_f64(&mut block[..end - g_lo], w, &dev[g_lo..end]);
+            }
+            if g_hi > nd {
+                let start = g_lo.max(nd);
+                axpy_f64(&mut block[start - g_lo..], w, &srv[start - nd..g_hi - nd]);
+            }
+        }
+        for (o, &a) in out[lo..hi].iter_mut().zip(block.iter()) {
+            *o = a as f32;
+        }
+        lo = hi;
+    }
+}
+
+/// Weighted average over *split* parameter vectors, written into `out`.
+///
+/// Each source is the pair `(device_half, server_half)` exactly as it lives
+/// in `DeviceState`/`ServerState`, so FedAvg can aggregate without first
+/// materialising a concatenated clone per device.  `scratch` is the
+/// caller-owned f64 accumulator, resized (not reallocated) across rounds.
+/// `workers > 1` splits `out` into contiguous ranges reduced on scoped
+/// threads; any worker count produces bit-identical output (see
+/// [`reduce_range`]).
+pub fn weighted_average_split_into(
+    out: &mut [f32],
+    halves: &[(&[f32], &[f32])],
+    weights: &[f64],
+    workers: usize,
+    scratch: &mut Vec<f64>,
+) -> Result<()> {
+    if halves.is_empty() || halves.len() != weights.len() {
         return Err(Error::other("weighted_average: arity mismatch"));
     }
-    let n = vectors[0].len();
-    if vectors.iter().any(|v| v.len() != n) {
+    let n = out.len();
+    let nd = halves[0].0.len();
+    if halves
+        .iter()
+        .any(|(d, s)| d.len() != nd || d.len() + s.len() != n)
+    {
         return Err(Error::other("weighted_average: length mismatch"));
     }
     let total: f64 = weights.iter().sum();
@@ -116,14 +188,64 @@ pub fn weighted_average(vectors: &[&[f32]], weights: &[f64]) -> Result<Vec<f32>>
         return Err(Error::other("weighted_average: non-positive total weight"));
     }
     // f64 accumulation: aggregation error must not grow with device count.
-    let mut acc = vec![0.0f64; n];
-    for (v, &w) in vectors.iter().zip(weights) {
-        let wn = w / total;
-        for (a, &x) in acc.iter_mut().zip(*v) {
-            *a += wn * x as f64;
-        }
+    let wn: Vec<f64> = weights.iter().map(|w| w / total).collect();
+    scratch.resize(n, 0.0);
+    let threads = workers.max(1);
+    if threads == 1 || n < PAR_MIN {
+        reduce_range(&mut scratch[..n], out, halves, &wn, nd, 0);
+        return Ok(());
     }
-    Ok(acc.into_iter().map(|x| x as f32).collect())
+    let per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut acc_rest: &mut [f64] = &mut scratch[..n];
+        let mut out_rest: &mut [f32] = out;
+        let mut offset = 0usize;
+        let wn = &wn;
+        while !acc_rest.is_empty() {
+            let take = per.min(acc_rest.len());
+            let (acc, ar) = acc_rest.split_at_mut(take);
+            let (o, or) = out_rest.split_at_mut(take);
+            acc_rest = ar;
+            out_rest = or;
+            s.spawn(move || reduce_range(acc, o, halves, wn, nd, offset));
+            offset += take;
+        }
+    });
+    Ok(())
+}
+
+/// [`weighted_average_split_into`] for plain (unsplit) vectors.
+pub fn weighted_average_into(
+    out: &mut [f32],
+    vectors: &[&[f32]],
+    weights: &[f64],
+    workers: usize,
+    scratch: &mut Vec<f64>,
+) -> Result<()> {
+    if vectors.is_empty() || vectors.len() != weights.len() {
+        return Err(Error::other("weighted_average: arity mismatch"));
+    }
+    if vectors.iter().any(|v| v.len() != out.len()) {
+        return Err(Error::other("weighted_average: length mismatch"));
+    }
+    let halves: Vec<(&[f32], &[f32])> = vectors.iter().map(|v| (*v, &[][..])).collect();
+    weighted_average_split_into(out, &halves, weights, workers, scratch)
+}
+
+/// Weighted average of flat parameter vectors: `Σ wᵢ·xᵢ / Σ wᵢ`.
+///
+/// This is FedAvg's core reduction; weights are sample counts.  Serial,
+/// allocating convenience wrapper around [`weighted_average_into`] —
+/// bit-identical to it (and to the parallel split variant) by
+/// construction.
+pub fn weighted_average(vectors: &[&[f32]], weights: &[f64]) -> Result<Vec<f32>> {
+    if vectors.is_empty() {
+        return Err(Error::other("weighted_average: arity mismatch"));
+    }
+    let mut out = vec![0.0f32; vectors[0].len()];
+    let mut scratch = Vec::new();
+    weighted_average_into(&mut out, vectors, weights, 1, &mut scratch)?;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -220,6 +342,95 @@ mod tests {
                 assert!((avg[i] - avg_s[i]).abs() < 1e-5);
             }
         });
+    }
+
+    /// The chunked/parallel reduction is bit-identical to the serial one
+    /// for every worker count, including lengths that straddle chunk
+    /// boundaries and the device/server-half seam.
+    #[test]
+    fn prop_parallel_reduction_bit_identical_to_serial() {
+        use crate::util::prop::forall;
+        use crate::util::Rng;
+        forall(30, |r: &mut Rng| {
+            let k = 1 + r.below(6);
+            // lengths around the chunk boundary and well past PAR_MIN
+            let n = match r.below(4) {
+                0 => 1 + r.below(64),
+                1 => REDUCE_CHUNK - 1 + r.below(3),
+                2 => PAR_MIN + r.below(100),
+                _ => 3 * REDUCE_CHUNK + r.below(1000),
+            };
+            let nd = r.below(n + 1);
+            let devs: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..nd).map(|_| r.gaussian() as f32).collect())
+                .collect();
+            let srvs: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..n - nd).map(|_| r.gaussian() as f32).collect())
+                .collect();
+            let weights: Vec<f64> = (0..k).map(|_| 0.1 + r.next_f64() * 10.0).collect();
+
+            // serial reference through the original entry point
+            let concat: Vec<Vec<f32>> = devs
+                .iter()
+                .zip(&srvs)
+                .map(|(d, s)| d.iter().chain(s.iter()).copied().collect())
+                .collect();
+            let refs: Vec<&[f32]> = concat.iter().map(|v| v.as_slice()).collect();
+            let reference = weighted_average(&refs, &weights).unwrap();
+
+            let halves: Vec<(&[f32], &[f32])> = devs
+                .iter()
+                .zip(&srvs)
+                .map(|(d, s)| (d.as_slice(), s.as_slice()))
+                .collect();
+            let mut scratch = Vec::new();
+            let mut out = vec![0.0f32; n];
+            for workers in [1usize, 2, 3, 4, 8] {
+                out.fill(0.0);
+                weighted_average_split_into(&mut out, &halves, &weights, workers, &mut scratch)
+                    .unwrap();
+                for (i, (a, b)) in out.iter().zip(&reference).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "workers={workers} n={n} nd={nd} differs at {i}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn split_into_validates_inputs() {
+        let d = [1.0f32, 2.0];
+        let s = [3.0f32];
+        let mut out = vec![0.0f32; 3];
+        let mut scratch = Vec::new();
+        // empty
+        assert!(weighted_average_split_into(&mut out, &[], &[], 1, &mut scratch).is_err());
+        // arity
+        assert!(
+            weighted_average_split_into(&mut out, &[(&d, &s)], &[1.0, 2.0], 1, &mut scratch)
+                .is_err()
+        );
+        // length
+        let mut short = vec![0.0f32; 2];
+        assert!(
+            weighted_average_split_into(&mut short, &[(&d, &s)], &[1.0], 1, &mut scratch).is_err()
+        );
+        // weight
+        assert!(
+            weighted_average_split_into(&mut out, &[(&d, &s)], &[0.0], 1, &mut scratch).is_err()
+        );
+        // ok, and scratch is reusable across calls
+        assert!(
+            weighted_average_split_into(&mut out, &[(&d, &s)], &[2.0], 1, &mut scratch).is_ok()
+        );
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
+        assert!(
+            weighted_average_split_into(&mut out, &[(&d, &s)], &[5.0], 4, &mut scratch).is_ok()
+        );
+        assert_eq!(out, vec![1.0, 2.0, 3.0]);
     }
 
     #[test]

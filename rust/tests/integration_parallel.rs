@@ -1,0 +1,284 @@
+//! Determinism of the worker-pool runner: the same seed must produce a
+//! byte-identical `RunReport` for `workers = 1, 2, 4, 8` — migration
+//! rounds included — in both SimOnly and Real modes.
+//!
+//! SimOnly tests build a synthetic manifest in memory, so they run with no
+//! AOT artifacts on disk and always execute in CI.  Real-mode tests need
+//! `make artifacts` and skip (pass) quietly when artifacts are missing,
+//! matching the other integration suites.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fedfly::config::{ExecMode, RunConfig};
+use fedfly::coordinator::Runner;
+use fedfly::experiments::load_meta;
+use fedfly::manifest::Manifest;
+use fedfly::metrics::RunReport;
+use fedfly::migration::Strategy;
+use fedfly::mobility::{MoveEvent, Schedule};
+use fedfly::model::ModelMeta;
+use fedfly::runtime::Engine;
+
+/// A small but fully-valid manifest (1000 params, all three split points)
+/// parsed from memory — enough for SimOnly runs, which never execute HLO.
+fn sim_meta() -> ModelMeta {
+    let text = r#"{
+      "lr": 0.01, "momentum": 0.9, "num_classes": 10,
+      "image_shape": [32, 32, 3], "total_params": 1000,
+      "batch_variants": [16, 100],
+      "params": [
+        {"name": "conv_w", "shape": [10, 10], "offset": 0, "len": 100},
+        {"name": "conv_b", "shape": [100], "offset": 100, "len": 100},
+        {"name": "fc_w", "shape": [8, 100], "offset": 200, "len": 800}
+      ],
+      "blocks": [
+        {"name": "b0", "fwd_flops_per_image": 1000000.0},
+        {"name": "b1", "fwd_flops_per_image": 2000000.0}
+      ],
+      "splits": {
+        "1": {"device_params": 100, "server_params": 900,
+              "smashed_shape": [16, 16, 4],
+              "device_fwd_flops_per_image": 1000000.0,
+              "server_fwd_flops_per_image": 5000000.0},
+        "2": {"device_params": 200, "server_params": 800,
+              "smashed_shape": [8, 8, 8],
+              "device_fwd_flops_per_image": 2000000.0,
+              "server_fwd_flops_per_image": 4000000.0},
+        "3": {"device_params": 400, "server_params": 600,
+              "smashed_shape": [4, 4, 16],
+              "device_fwd_flops_per_image": 3000000.0,
+              "server_fwd_flops_per_image": 3000000.0}
+      },
+      "artifacts": {"device_fwd_sp2_b16": {
+          "file": "device_fwd_sp2_b16.hlo.txt", "phase": "device_fwd",
+          "sp": 2, "batch": 16, "inputs": [[200], [16, 32, 32, 3]],
+          "outputs": [[16, 8, 8, 8]]}}
+    }"#;
+    let m = Manifest::parse(text, PathBuf::from("/tmp")).unwrap();
+    ModelMeta::new(Arc::new(m))
+}
+
+/// A schedule with single- and multi-device migration rounds in both
+/// directions — every code path the pool must keep deterministic.
+fn busy_schedule() -> Schedule {
+    Schedule::new(vec![
+        MoveEvent { round: 2, device: 0, to_edge: 1 },
+        MoveEvent { round: 5, device: 1, to_edge: 1 },
+        MoveEvent { round: 5, device: 3, to_edge: 0 },
+        MoveEvent { round: 8, device: 0, to_edge: 0 },
+    ])
+}
+
+/// Compare every *deterministic* field of two reports bit-for-bit.
+/// Measured host times (`host_seconds`, `migration_host_seconds`, `perf`)
+/// are wall clock and excluded by design.
+fn assert_reports_identical(a: &RunReport, b: &RunReport, label: &str) {
+    assert_eq!(a.strategy, b.strategy, "{label}: strategy");
+    assert_eq!(a.sp, b.sp, "{label}: sp");
+    assert_eq!(a.rounds.len(), b.rounds.len(), "{label}: round count");
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        let r = ra.round;
+        assert_eq!(ra.round, rb.round, "{label}: round index");
+        assert_eq!(
+            ra.mean_loss.to_bits(),
+            rb.mean_loss.to_bits(),
+            "{label}: mean_loss at round {r}"
+        );
+        match (ra.accuracy, rb.accuracy) {
+            (None, None) => {}
+            (Some(x), Some(y)) => assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{label}: accuracy at round {r}"
+            ),
+            _ => panic!("{label}: accuracy presence differs at round {r}"),
+        }
+        assert_eq!(ra.devices.len(), rb.devices.len(), "{label}: device count");
+        for (da, db) in ra.devices.iter().zip(&rb.devices) {
+            let d = da.device;
+            assert_eq!(da.device, db.device, "{label}: device order at round {r}");
+            assert_eq!(da.edge, db.edge, "{label}: edge of device {d} round {r}");
+            assert_eq!(
+                da.sim_seconds.to_bits(),
+                db.sim_seconds.to_bits(),
+                "{label}: sim_seconds of device {d} round {r}"
+            );
+            assert_eq!(
+                da.loss.to_bits(),
+                db.loss.to_bits(),
+                "{label}: loss of device {d} round {r}"
+            );
+            assert_eq!(da.migrated, db.migrated, "{label}: migrated d{d} r{r}");
+            assert_eq!(
+                da.migration_sim_seconds.to_bits(),
+                db.migration_sim_seconds.to_bits(),
+                "{label}: migration_sim d{d} r{r}"
+            );
+            assert_eq!(
+                da.restart_penalty_sim_seconds.to_bits(),
+                db.restart_penalty_sim_seconds.to_bits(),
+                "{label}: restart_penalty d{d} r{r}"
+            );
+            assert_eq!(
+                da.migration_failed, db.migration_failed,
+                "{label}: migration_failed d{d} r{r}"
+            );
+        }
+    }
+    assert_eq!(
+        a.final_params.len(),
+        b.final_params.len(),
+        "{label}: final_params length"
+    );
+    for (i, (x, y)) in a.final_params.iter().zip(&b.final_params).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: final param {i}");
+    }
+}
+
+fn run_sim(workers: usize, strategy: Strategy, fault: f64) -> RunReport {
+    let mut cfg = RunConfig::paper_testbed();
+    cfg.rounds = 12;
+    cfg.strategy = strategy;
+    cfg.fault_loss_prob = fault;
+    cfg.schedule = busy_schedule();
+    cfg.workers = workers;
+    Runner::new(cfg, sim_meta()).unwrap().run(None).unwrap()
+}
+
+#[test]
+fn simonly_fedfly_bit_identical_across_worker_counts() {
+    let base = run_sim(1, Strategy::FedFly, 0.0);
+    // The schedule must actually migrate, or this test proves nothing.
+    let moves: usize = base.summaries().iter().map(|s| s.moves).sum();
+    assert_eq!(moves, 4, "schedule should drive 4 migrations");
+    for w in [2, 4, 8] {
+        let r = run_sim(w, Strategy::FedFly, 0.0);
+        assert_reports_identical(&base, &r, &format!("fedfly workers={w}"));
+    }
+}
+
+#[test]
+fn simonly_restart_bit_identical_across_worker_counts() {
+    let base = run_sim(1, Strategy::Restart, 0.0);
+    let penalty: f64 = base
+        .summaries()
+        .iter()
+        .map(|s| s.total_restart_penalty)
+        .sum();
+    assert!(penalty > 0.0, "restart baseline should charge penalties");
+    for w in [2, 4] {
+        let r = run_sim(w, Strategy::Restart, 0.0);
+        assert_reports_identical(&base, &r, &format!("restart workers={w}"));
+    }
+}
+
+#[test]
+fn simonly_fault_injection_bit_identical_across_worker_counts() {
+    // 100% transfer loss: every FedFly migration falls back to restart.
+    // The fault RNG runs on the main thread either way, so the fallback
+    // decisions — and the whole report — stay identical.
+    let base = run_sim(1, Strategy::FedFly, 1.0);
+    let failed: usize = base
+        .summaries()
+        .iter()
+        .map(|s| s.failed_migrations)
+        .sum();
+    assert_eq!(failed, 4, "all transfers should be lost at prob 1.0");
+    for w in [2, 4] {
+        let r = run_sim(w, Strategy::FedFly, 1.0);
+        assert_reports_identical(&base, &r, &format!("faulty workers={w}"));
+    }
+}
+
+#[test]
+fn pool_reports_worker_perf_accounting() {
+    let r = run_sim(4, Strategy::FedFly, 0.0);
+    assert_eq!(r.perf.workers, 4);
+    assert_eq!(r.perf.workers_perf.len(), 4);
+    // 12 rounds x 4 devices, statically assigned device % 4 -> one
+    // device-round per worker per round.
+    let tasks: usize = r.perf.workers_perf.iter().map(|w| w.tasks).sum();
+    assert_eq!(tasks, 12 * 4);
+    for (w, wp) in r.perf.workers_perf.iter().enumerate() {
+        assert_eq!(wp.worker, w);
+        assert_eq!(wp.tasks, 12);
+    }
+
+    let serial = run_sim(1, Strategy::FedFly, 0.0);
+    assert_eq!(serial.perf.workers, 1);
+    assert_eq!(serial.perf.workers_perf.len(), 1);
+    assert_eq!(serial.perf.workers_perf[0].tasks, 12 * 4);
+}
+
+#[test]
+fn more_workers_than_devices_is_fine() {
+    // workers=8 > devices=4: half the pool sits idle every round; results
+    // must be unaffected (covered by the determinism test above, but this
+    // pins the accounting too).
+    let r = run_sim(8, Strategy::FedFly, 0.0);
+    assert_eq!(r.perf.workers_perf.len(), 8);
+    let busy_workers = r.perf.workers_perf.iter().filter(|w| w.tasks > 0).count();
+    assert_eq!(busy_workers, 4);
+}
+
+// ---------------------------------------------------------------------------
+// Real mode (needs `make artifacts`; skips quietly without them)
+
+fn real_cfg(workers: usize) -> RunConfig {
+    let mut cfg = RunConfig::paper_testbed();
+    cfg.rounds = 4;
+    cfg.batch = 16;
+    cfg.train_samples = 256; // 4 batches/device/round
+    cfg.test_samples = 64;
+    cfg.exec = ExecMode::Real;
+    cfg.eval_every = Some(2);
+    cfg.workers = workers;
+    cfg.schedule = Schedule::new(vec![
+        MoveEvent { round: 1, device: 0, to_edge: 1 },
+        MoveEvent { round: 3, device: 2, to_edge: 0 },
+    ]);
+    cfg
+}
+
+/// THE acceptance test: real training through the pool — losses, accuracy
+/// and final parameters bit-identical to the serial engine for every
+/// worker count, with migrations in flight.
+#[test]
+fn real_mode_bit_identical_across_worker_counts() {
+    let Ok(meta) = load_meta() else { return };
+    let Ok(engine) = Engine::new(meta.manifest.clone()) else { return };
+
+    let base = Runner::new(real_cfg(1), meta.clone())
+        .unwrap()
+        .run(Some(&engine))
+        .unwrap();
+    assert!(base.final_accuracy().is_some(), "eval must have run");
+    let moves: usize = base.summaries().iter().map(|s| s.moves).sum();
+    assert_eq!(moves, 2, "schedule should drive 2 migrations");
+
+    for w in [2usize, 4] {
+        // workers > 1: no engine passed — each pool worker owns one.
+        let r = Runner::new(real_cfg(w), meta.clone())
+            .unwrap()
+            .run(None)
+            .unwrap();
+        assert_reports_identical(&base, &r, &format!("real workers={w}"));
+    }
+}
+
+/// Pool workers execute HLO on their private engines and say so.
+#[test]
+fn real_mode_pool_perf_counts_engine_executions() {
+    let Ok(meta) = load_meta() else { return };
+    let r = Runner::new(real_cfg(2), meta).unwrap().run(None).unwrap();
+    assert_eq!(r.perf.workers_perf.len(), 2);
+    let execs: u64 = r
+        .perf
+        .workers_perf
+        .iter()
+        .map(|w| w.engine_executions)
+        .sum();
+    assert!(execs > 0, "workers should have executed HLO");
+    assert!(r.perf.train_wall_seconds > 0.0);
+}
