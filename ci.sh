@@ -11,3 +11,5 @@ cd "$(dirname "$0")"
 cargo build --release
 cargo test -q
 cargo clippy --all-targets -- -D warnings
+# Benches must keep compiling (they are run manually, not in CI).
+cargo bench --no-run

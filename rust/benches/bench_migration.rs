@@ -1,0 +1,104 @@
+//! Checkpoint wire-format benches: full vs full+zstd vs delta vs
+//! delta+zstd frames at VGG-5-sized parameter counts, plus chunked
+//! stream reassembly — the encode/decode side of the paper's "up to two
+//! seconds" migration budget.
+//!
+//! Run with: `cargo bench --bench bench_migration`
+
+mod harness;
+
+use fedfly::migration::codec::{
+    decode_with, encode, encode_for_transfer, Checkpoint, DeltaBase, ZSTD_LEVEL,
+};
+use fedfly::migration::StreamAssembler;
+use fedfly::util::Rng;
+
+/// VGG-5 SP2 server half when the manifest is on disk; a paper-scale
+/// fallback otherwise so the bench runs pre-`make artifacts`.
+fn server_param_count() -> usize {
+    fedfly::experiments::load_meta()
+        .ok()
+        .and_then(|m| m.server_params(2).ok())
+        .unwrap_or(1_000_000)
+}
+
+fn main() {
+    let ns = server_param_count();
+    let smashed = 100 * 8 * 8 * 8; // batch-100 SP2 smashed activations
+    let mut rng = Rng::new(0xBE7C);
+    let broadcast: Vec<f32> = (0..ns).map(|_| (rng.next_f64() as f32) - 0.5).collect();
+
+    // Round-boundary move: the server half still equals the round's
+    // broadcast, zero optimizer state — the case the pre-copy path ships.
+    let boundary = Checkpoint {
+        device_id: 0,
+        sp: 2,
+        round: 50,
+        epoch: 0,
+        batch_idx: 0,
+        loss: 1.0,
+        server_params: broadcast.clone(),
+        server_momentum: vec![0.0; ns],
+        grad_smashed: vec![0.0; smashed],
+        rng_state: [1, 2, 3, 4],
+    };
+    // Mid-round move: params drifted off the broadcast, live momentum and
+    // a real smashed gradient — the worst case for the delta codec.
+    let mid = Checkpoint {
+        batch_idx: 17,
+        server_params: broadcast.iter().map(|&p| p + 1e-4).collect(),
+        server_momentum: (0..ns).map(|_| (rng.next_f64() as f32) * 1e-3).collect(),
+        grad_smashed: (0..smashed).map(|_| (rng.next_f64() as f32) - 0.5).collect(),
+        ..boundary.clone()
+    };
+    let base = DeltaBase::from_broadcast(50, broadcast.clone());
+
+    harness::header(&format!("Checkpoint wire formats ({ns} server params)"));
+    let full = encode(&boundary);
+    harness::bench("encode/full-raw", 2, 10, || encode(&boundary));
+    let full_z = encode_for_transfer(&boundary, None, Some(ZSTD_LEVEL)).unwrap();
+    harness::bench("encode/full+zstd", 2, 10, || {
+        encode_for_transfer(&boundary, None, Some(ZSTD_LEVEL)).unwrap()
+    });
+    let delta_raw = encode_for_transfer(&boundary, Some(&base), None).unwrap();
+    harness::bench("encode/delta-raw (boundary)", 2, 10, || {
+        encode_for_transfer(&boundary, Some(&base), None).unwrap()
+    });
+    let delta_z = encode_for_transfer(&boundary, Some(&base), Some(ZSTD_LEVEL)).unwrap();
+    harness::bench("encode/delta+zstd (boundary)", 2, 10, || {
+        encode_for_transfer(&boundary, Some(&base), Some(ZSTD_LEVEL)).unwrap()
+    });
+    let mid_z = encode_for_transfer(&mid, Some(&base), Some(ZSTD_LEVEL)).unwrap();
+    harness::bench("encode/delta+zstd (mid-round)", 2, 10, || {
+        encode_for_transfer(&mid, Some(&base), Some(ZSTD_LEVEL)).unwrap()
+    });
+    println!(
+        "wire bytes: full {} | full+zstd {} | delta-raw {} | delta+zstd {} | mid delta+zstd {}",
+        full.len(),
+        full_z.blob.len(),
+        delta_raw.blob.len(),
+        delta_z.blob.len(),
+        mid_z.blob.len()
+    );
+    assert!(delta_raw.used_delta && delta_z.used_delta && mid_z.used_delta);
+    assert!(
+        delta_z.blob.len() * 2 <= full.len(),
+        "boundary delta+zstd {} > 50% of full {}",
+        delta_z.blob.len(),
+        full.len()
+    );
+
+    harness::header("Decode + chunked reassembly");
+    harness::bench("decode/full-raw", 2, 10, || decode_with(&full, None).unwrap());
+    harness::bench("decode/delta+zstd via StreamAssembler", 2, 10, || {
+        let mut asm = StreamAssembler::new(delta_z.blob.len()).unwrap();
+        for chunk in delta_z.blob.chunks(256 * 1024) {
+            asm.push(chunk).unwrap();
+        }
+        decode_with(&asm.finish().unwrap(), Some(&base)).unwrap()
+    });
+    let rt = decode_with(&delta_z.blob, Some(&base)).unwrap();
+    assert!(rt == boundary, "delta roundtrip must be bit-exact");
+    let rt_mid = decode_with(&mid_z.blob, Some(&base)).unwrap();
+    assert!(rt_mid == mid, "mid-round delta roundtrip must be bit-exact");
+}

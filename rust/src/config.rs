@@ -60,6 +60,14 @@ pub struct RunConfig {
     /// is lost/corrupted in transit, forcing a restart fallback at the
     /// destination edge (0.0 = reliable network).
     pub fault_loss_prob: f64,
+    /// Encode migrating checkpoints as bit-exact deltas against the
+    /// round's broadcast global model when the destination edge holds the
+    /// same base (falls back to full frames automatically).
+    pub delta_migration: bool,
+    /// Pre-copy: start the checkpoint transfer when a move is announced
+    /// (one round ahead) and charge only the portion that exceeds the
+    /// round's remaining work window (see `timesim::precopy_window`).
+    pub overlap_migration: bool,
 }
 
 impl RunConfig {
@@ -86,6 +94,8 @@ impl RunConfig {
             seed: 7,
             workers: 1,
             fault_loss_prob: 0.0,
+            delta_migration: true,
+            overlap_migration: true,
         }
     }
 
@@ -203,6 +213,8 @@ impl RunConfig {
             ),
             ("seed", json::num(self.seed as f64)),
             ("workers", json::num(self.workers as f64)),
+            ("delta_migration", Value::Bool(self.delta_migration)),
+            ("overlap_migration", Value::Bool(self.overlap_migration)),
             (
                 "moves",
                 json::arr(
@@ -278,5 +290,7 @@ mod tests {
         let v = json::parse(&text).unwrap();
         assert_eq!(v.get_usize("rounds").unwrap(), 100);
         assert_eq!(v.get_str("strategy").unwrap(), "fedfly");
+        assert_eq!(v.get("delta_migration").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("overlap_migration").unwrap().as_bool(), Some(true));
     }
 }

@@ -14,7 +14,13 @@
 //! appends its server half and forwards to the central), `GlobalParams`
 //! broadcast after FedAvg.  Migration: `Msg::MoveNotice` makes the source
 //! edge checkpoint the device's server-side state and ship it to the
-//! destination edge (`Msg::CheckpointTransfer`) exactly as in Fig 2.
+//! destination edge exactly as in Fig 2 — as a chunked
+//! `CheckpointBegin`/`CheckpointChunk` stream, delta-encoded against the
+//! round's broadcast when both edges hold it, streamed from a background
+//! thread so the transfer overlaps the device's reconnect (pre-copy).
+//! The destination registers the incoming stream *before* the device's
+//! MoveNotice is acked, so a batch the device sends to its new edge early
+//! is parked until the checkpoint lands, never silently restarted.
 //!
 //! Threading: the PJRT client is not `Send`, so every compute-owning actor
 //! (each edge server, each device) owns a *private* [`Engine`].  Edge
@@ -22,7 +28,7 @@
 //! edge's single worker thread over a channel — the same
 //! router-in-front-of-a-worker shape vLLM-style serving routers use.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -32,8 +38,11 @@ use crate::data::{partition, BatchIter, SyntheticCifar};
 use crate::error::{Error, Result};
 use crate::fl::{Contribution, GlobalModel};
 use crate::manifest::Manifest;
-use crate::migration::codec::{decode, encode, Checkpoint};
-use crate::migration::Strategy;
+use crate::migration::codec::{
+    self, decode, encode_for_transfer, Checkpoint, DeltaBase, ZSTD_LEVEL,
+};
+use crate::migration::transport::DEFAULT_CHUNK_BYTES;
+use crate::migration::{StreamAssembler, Strategy};
 use crate::model::ModelMeta;
 use crate::proto::{read_msg, write_msg, Msg};
 use crate::runtime::{Engine, HostTensor};
@@ -265,10 +274,18 @@ fn edge_worker(
     batch: usize,
 ) -> Result<()> {
     let engine = Engine::new(manifest)?;
+    let dev_n = meta.device_params(sp)?;
     let mut states: HashMap<u64, ServerState> = HashMap::new();
     let mut inbox: HashMap<u64, Checkpoint> = HashMap::new();
     let mut global: Option<(u64, Vec<f32>)> = None;
     let mut pending_resumes: Vec<(u64, mpsc::Sender<Msg>)> = Vec::new();
+    // Delta bases (the last two rounds' broadcasts), in-flight checkpoint
+    // streams, devices whose checkpoint is still expected, and batches
+    // parked until that checkpoint lands (pre-copy reconciliation).
+    let mut bases: HashMap<u64, DeltaBase> = HashMap::new();
+    let mut incoming: HashMap<u64, StreamAssembler> = HashMap::new();
+    let mut expecting: HashSet<u64> = HashSet::new();
+    let mut parked: Vec<ParkedBatch> = Vec::new();
 
     let serve_resumes =
         |global: &Option<(u64, Vec<f32>)>, pending: &mut Vec<(u64, mpsc::Sender<Msg>)>| {
@@ -291,6 +308,16 @@ fn edge_worker(
         match work {
             Work::Shutdown => break,
             Work::Global { round, params } => {
+                // Every edge receives the same broadcast bits, so its
+                // server half is a delta base both endpoints of a future
+                // migration provably share.  Keep the last two rounds:
+                // a move's checkpoint references the source's current
+                // round, which may trail this edge by one.
+                bases.insert(
+                    round,
+                    DeltaBase::from_broadcast(round, params[dev_n..].to_vec()),
+                );
+                bases.retain(|&r, _| r + 2 > round);
                 global = Some((round, params));
                 serve_resumes(&global, &mut pending_resumes);
             }
@@ -304,11 +331,27 @@ fn edge_worker(
                     data,
                     labels,
                 } => {
-                    let out = edge_server_step(
-                        &engine, &meta, sp, batch, &mut states, &mut inbox, &global, device,
-                        &data, &labels,
-                    )?;
-                    let _ = reply.send(out);
+                    if !states.contains_key(&device)
+                        && !inbox.contains_key(&device)
+                        && expecting.contains(&device)
+                    {
+                        // Pre-copy reconciliation: the device reconnected
+                        // here while its checkpoint is still streaming in.
+                        // Hold the batch; it is served the moment the
+                        // stream resolves (drain below).
+                        parked.push(ParkedBatch {
+                            device,
+                            data,
+                            labels,
+                            reply,
+                        });
+                    } else {
+                        let out = edge_server_step(
+                            &engine, &meta, sp, batch, &mut states, &mut inbox, &global,
+                            device, &data, &labels,
+                        )?;
+                        let _ = reply.send(out);
+                    }
                 }
                 Msg::LocalUpdate {
                     device,
@@ -331,17 +374,20 @@ fn edge_worker(
                     let _ = reply.send(Msg::Ack { code: 0 });
                 }
                 Msg::MoveNotice { device, dest_edge } => {
-                    // FedFly Steps 7-8: checkpoint + transfer to the
-                    // destination edge over its socket.
+                    // FedFly Steps 7-8 with pre-copy: checkpoint, register
+                    // the stream at the destination, ack the device, and
+                    // stream the bytes in the background so the transfer
+                    // overlaps the device's reconnect + first batches.
                     let code = match states.remove(&device) {
                         Some(srv) => {
                             let dest = *peers.get(dest_edge as usize).ok_or_else(|| {
                                 Error::Proto(format!("unknown destination edge {dest_edge}"))
                             })?;
+                            let round = global.as_ref().map_or(0, |(r, _)| *r);
                             let ck = Checkpoint {
                                 device_id: device,
                                 sp: srv.sp as u32,
-                                round: global.as_ref().map_or(0, |(r, _)| *r),
+                                round,
                                 epoch: 0,
                                 batch_idx: srv.batches_done,
                                 loss: srv.last_loss,
@@ -350,32 +396,74 @@ fn edge_worker(
                                 grad_smashed: srv.last_grad_smashed,
                                 rng_state: [0; 4],
                             };
-                            let mut peer = TcpStream::connect(dest)?;
-                            peer.set_nodelay(true)?;
-                            write_msg(
-                                &mut peer,
-                                &Msg::CheckpointTransfer {
-                                    device,
-                                    blob: encode(&ck),
-                                },
-                            )?;
-                            match read_msg(&mut peer)? {
-                                Msg::Ack { code: 0 } => 0,
-                                _ => 3,
+                            match begin_checkpoint_stream(
+                                dest,
+                                ck,
+                                bases.get(&round).cloned(),
+                            ) {
+                                Ok(()) => 0,
+                                Err(_) => 3,
                             }
                         }
                         None => 4, // nothing to migrate (device never trained here)
                     };
                     let _ = reply.send(Msg::Ack { code });
                 }
-                Msg::CheckpointTransfer { device, blob } => {
-                    let code = match decode(&blob) {
-                        Ok(ck) => {
-                            inbox.insert(device, ck);
+                Msg::CheckpointBegin { device, total_len } => {
+                    // The source registers the stream before acking the
+                    // device's MoveNotice, so from this moment batches
+                    // from `device` are parked, never restarted.
+                    let code = match StreamAssembler::new(total_len as usize) {
+                        Ok(a) => {
+                            incoming.insert(device, a);
+                            expecting.insert(device);
                             0
                         }
                         Err(_) => 1,
                     };
+                    let _ = reply.send(Msg::Ack { code });
+                }
+                Msg::CheckpointChunk { device, data } => {
+                    let mut resolved = false;
+                    let code = match incoming.remove(&device) {
+                        Some(mut a) => match a.push(&data) {
+                            Ok(()) if !a.is_complete() => {
+                                incoming.insert(device, a);
+                                0
+                            }
+                            Ok(()) => {
+                                resolved = true;
+                                match a.finish() {
+                                    Ok(frame) => {
+                                        ingest_frame(&bases, &mut inbox, device, frame)
+                                    }
+                                    Err(_) => 1,
+                                }
+                            }
+                            Err(_) => {
+                                resolved = true;
+                                1
+                            }
+                        },
+                        None => {
+                            resolved = true;
+                            2
+                        }
+                    };
+                    // Code 5 = delta base missing: the sender re-streams a
+                    // full frame, so keep expecting it.  Anything else
+                    // resolves the stream (landed, or hard failure — the
+                    // parked batches then restart from the global, the
+                    // same semantics as a lost transfer).
+                    if resolved && code != 5 {
+                        expecting.remove(&device);
+                    }
+                    let _ = reply.send(Msg::Ack { code });
+                }
+                Msg::CheckpointTransfer { device, blob } => {
+                    // Legacy one-shot frame (small checkpoints / old
+                    // senders); base-aware so delta frames decode too.
+                    let code = ingest_frame(&bases, &mut inbox, device, blob);
                     let _ = reply.send(Msg::Ack { code });
                 }
                 other => {
@@ -384,8 +472,185 @@ fn edge_worker(
                 }
             },
         }
+        // Serve parked batches whose checkpoint stream has resolved:
+        // landed in the inbox (FedFly resume) or died without one (the
+        // state restarts from the global, as with any lost transfer).
+        let mut i = 0;
+        while i < parked.len() {
+            let device = parked[i].device;
+            let ready = states.contains_key(&device)
+                || inbox.contains_key(&device)
+                || !expecting.contains(&device);
+            if ready {
+                let p = parked.remove(i);
+                let out = edge_server_step(
+                    &engine, &meta, sp, batch, &mut states, &mut inbox, &global, p.device,
+                    &p.data, &p.labels,
+                )?;
+                let _ = p.reply.send(out);
+            } else {
+                i += 1;
+            }
+        }
     }
     Ok(())
+}
+
+/// A device batch that reached the destination edge before the device's
+/// migrating checkpoint finished streaming in; held until it resolves.
+struct ParkedBatch {
+    device: u64,
+    data: Vec<f32>,
+    labels: Vec<f32>,
+    reply: mpsc::Sender<Msg>,
+}
+
+/// Decode a fully-reassembled checkpoint frame (full or delta, raw or
+/// zstd-wrapped) into the inbox.  Returns the ack code: 0 ok, 1 corrupt,
+/// 5 delta base missing (the sender falls back to a full frame).
+fn ingest_frame(
+    bases: &HashMap<u64, DeltaBase>,
+    inbox: &mut HashMap<u64, Checkpoint>,
+    device: u64,
+    frame: Vec<u8>,
+) -> u32 {
+    let raw = match codec::unwrap_envelope(&frame) {
+        Ok(r) => r,
+        Err(_) => return 1,
+    };
+    let raw = raw.as_ref();
+    let res = match codec::delta_base_id(raw) {
+        Some((round, _)) => codec::decode_delta(raw, bases.get(&round)),
+        None => decode(raw),
+    };
+    match res {
+        Ok(ck) => {
+            inbox.insert(device, ck);
+            0
+        }
+        Err(Error::DeltaBaseMissing { .. }) => 5,
+        Err(_) => 1,
+    }
+}
+
+/// FedFly Steps 7-8 with pre-copy: encode (delta when a shared base is
+/// known), register the stream at the destination with `CheckpointBegin`
+/// *before* the caller acks the device — so a batch the device sends to
+/// its new edge early is parked, never restarted — then stream the chunks
+/// from a background thread, overlapping the transfer with the device's
+/// reconnect and first batches there.
+fn begin_checkpoint_stream(
+    dest: SocketAddr,
+    ck: Checkpoint,
+    base: Option<DeltaBase>,
+) -> Result<()> {
+    let enc = encode_for_transfer(&ck, base.as_ref(), Some(ZSTD_LEVEL))?;
+    let device = ck.device_id;
+    let mut peer = TcpStream::connect(dest)?;
+    peer.set_nodelay(true)?;
+    write_msg(
+        &mut peer,
+        &Msg::CheckpointBegin {
+            device,
+            total_len: enc.blob.len() as u64,
+        },
+    )?;
+    match read_msg(&mut peer)? {
+        Msg::Ack { code: 0 } => {}
+        other => {
+            return Err(Error::Proto(format!(
+                "destination rejected checkpoint stream: {other:?}"
+            )))
+        }
+    }
+    // The full checkpoint is kept only when a delta went out, for the
+    // Ack-5 fall-back-to-full retry.
+    let fallback = if enc.used_delta { Some(ck) } else { None };
+    std::thread::spawn(move || {
+        if let Err(e) = stream_checkpoint_chunks(&mut peer, device, &enc.blob, fallback) {
+            crate::util::logging::log(
+                crate::util::logging::Level::Error,
+                "edge",
+                format_args!("checkpoint stream to {dest} failed: {e}"),
+            );
+        }
+        let _ = write_msg(&mut peer, &Msg::Bye);
+    });
+    Ok(())
+}
+
+/// Stream an encoded blob as chunks; on the destination's Ack-5 ("delta
+/// base missing") answer, re-encode full and re-stream on the same
+/// connection.
+fn stream_checkpoint_chunks(
+    peer: &mut TcpStream,
+    device: u64,
+    blob: &[u8],
+    fallback: Option<Checkpoint>,
+) -> Result<()> {
+    match stream_chunks(peer, device, blob)? {
+        0 => Ok(()),
+        5 => {
+            let ck = fallback.ok_or_else(|| {
+                Error::Proto("destination demanded a delta base for a full frame".into())
+            })?;
+            let retry = encode_for_transfer(&ck, None, Some(ZSTD_LEVEL))?;
+            write_msg(
+                peer,
+                &Msg::CheckpointBegin {
+                    device,
+                    total_len: retry.blob.len() as u64,
+                },
+            )?;
+            match read_msg(peer)? {
+                Msg::Ack { code: 0 } => {}
+                other => {
+                    return Err(Error::Proto(format!(
+                        "destination rejected checkpoint retry: {other:?}"
+                    )))
+                }
+            }
+            match stream_chunks(peer, device, &retry.blob)? {
+                0 => Ok(()),
+                c => Err(Error::Proto(format!(
+                    "checkpoint retry rejected (code {c})"
+                ))),
+            }
+        }
+        c => Err(Error::Proto(format!(
+            "checkpoint stream rejected (code {c})"
+        ))),
+    }
+}
+
+/// Send `blob` as `CheckpointChunk` frames, reading the per-chunk ack the
+/// destination's connection handler relays back; returns the final ack.
+fn stream_chunks(peer: &mut TcpStream, device: u64, blob: &[u8]) -> Result<u32> {
+    let total = blob.chunks(DEFAULT_CHUNK_BYTES).count();
+    for (i, chunk) in blob.chunks(DEFAULT_CHUNK_BYTES).enumerate() {
+        write_msg(
+            peer,
+            &Msg::CheckpointChunk {
+                device,
+                data: chunk.to_vec(),
+            },
+        )?;
+        let code = match read_msg(peer)? {
+            Msg::Ack { code } => code,
+            other => {
+                return Err(Error::Proto(format!("expected chunk ack, got {other:?}")))
+            }
+        };
+        if i + 1 == total {
+            return Ok(code);
+        }
+        if code != 0 {
+            return Err(Error::Proto(format!(
+                "checkpoint chunk rejected (code {code})"
+            )));
+        }
+    }
+    Err(Error::Proto("empty checkpoint stream".into()))
 }
 
 /// Execute the edge-side training step for one smashed batch.

@@ -30,9 +30,10 @@ use crate::error::{Error, Result};
 use crate::fl::GlobalModel;
 use crate::metrics::{DeviceRound, RoundRecord, RunPerf, RunReport, WorkerPerf};
 use crate::migration::{
-    codec::Checkpoint, InMemTransport, MigrationRoute, Strategy, Transport,
+    codec::Checkpoint, DeltaBase, InMemTransport, MigrationRoute, Strategy, Transport,
 };
 use crate::model::ModelMeta;
+use crate::netsim;
 use crate::runtime::Engine;
 use crate::split::{accuracy_from_logits, DeviceState, ServerState, SplitEngine};
 use crate::timesim::PairTimeModel;
@@ -168,6 +169,10 @@ impl Runner {
             let mut moved = vec![false; devices.len()];
             let mut mig_sim = vec![0.0f64; devices.len()];
             let mut mig_host = vec![0.0f64; devices.len()];
+            let mut mig_hidden = vec![0.0f64; devices.len()];
+            let mut mig_wire = vec![0u64; devices.len()];
+            let mut mig_full = vec![0u64; devices.len()];
+            let mut mig_delta = vec![false; devices.len()];
             let mut penalty = vec![0.0f64; devices.len()];
             let mut failed = vec![false; devices.len()];
             for e in moves {
@@ -204,8 +209,22 @@ impl Runner {
                             grad_smashed: std::mem::take(&mut ctx.srv.last_grad_smashed),
                             rng_state: ctx.rng.state(),
                         };
-                        let bytes = ck.wire_bytes();
-                        let host = transport.send(e.to_edge, &ck)?;
+                        // Both edges hold this round's broadcast global
+                        // model, so the checkpoint can travel as a
+                        // bit-exact delta against it (codec VERSION 2);
+                        // the transport falls back to a full frame when
+                        // the destination cannot prove it has the base.
+                        if cfg.delta_migration {
+                            let dev_n = meta.device_params(cfg.sp)?;
+                            transport.register_base(
+                                e.to_edge,
+                                DeltaBase::from_broadcast(
+                                    round,
+                                    global.params[dev_n..].to_vec(),
+                                ),
+                            );
+                        }
+                        let stats = transport.send(e.to_edge, &ck)?;
                         let restored = transport
                             .receive(e.to_edge, e.device as u64)?
                             .ok_or_else(|| Error::other("checkpoint lost in transit"))?;
@@ -214,13 +233,45 @@ impl Runner {
                         ctx.srv.last_grad_smashed = restored.grad_smashed;
                         ctx.srv.last_loss = restored.loss;
                         ctx.rng = Rng::from_state(restored.rng_state);
-                        mig_host[e.device] = host;
-                        mig_sim[e.device] = match cfg.route {
-                            MigrationRoute::EdgeToEdge => cfg.net.migration_time(bytes),
+                        mig_host[e.device] = stats.host_seconds;
+                        mig_wire[e.device] = stats.wire_bytes as u64;
+                        mig_full[e.device] = stats.full_bytes as u64;
+                        mig_delta[e.device] = stats.used_delta;
+                        perf.migrations += 1;
+                        perf.migration_encode_seconds += stats.encode_seconds;
+                        perf.migration_decode_seconds += stats.decode_seconds;
+                        // Simulated wire time is charged on the bytes that
+                        // actually crossed the link, not the in-memory
+                        // checkpoint size.
+                        let t_xfer = match cfg.route {
+                            MigrationRoute::EdgeToEdge => {
+                                cfg.net.migration_time(stats.wire_bytes)
+                            }
                             MigrationRoute::ViaDevice => {
-                                cfg.net.migration_time_via_device(bytes)
+                                cfg.net.migration_time_via_device(stats.wire_bytes)
                             }
                         };
+                        // Pre-copy: the move is announced one round ahead
+                        // (paper §IV — "the moving device knows when to
+                        // disconnect"), so the transfer streams while the
+                        // SOURCE edge's round finishes; only the excess
+                        // beyond that window delays training.  ctx.edge is
+                        // still the source edge here.
+                        let window = if cfg.overlap_migration
+                            && e.announce_round().is_some()
+                        {
+                            let pair = PairTimeModel {
+                                device: cfg.device_profiles[e.device],
+                                edge: cfg.edge_profiles[ctx.edge],
+                                net: cfg.net,
+                            };
+                            pair.precopy_window(meta, cfg.sp, cfg.batch)
+                        } else {
+                            0.0
+                        };
+                        let o = netsim::overlap(t_xfer, window);
+                        mig_sim[e.device] = o.charged;
+                        mig_hidden[e.device] = o.hidden;
                     }
                     Strategy::Restart => {
                         // Destination edge has no state: server-side half
@@ -285,6 +336,10 @@ impl Runner {
                         migrated: moved[d],
                         migration_sim_seconds: mig_sim[d],
                         migration_host_seconds: mig_host[d],
+                        migration_hidden_sim_seconds: mig_hidden[d],
+                        migration_wire_bytes: mig_wire[d],
+                        migration_full_bytes: mig_full[d],
+                        migration_used_delta: mig_delta[d],
                         restart_penalty_sim_seconds: penalty[d],
                         migration_failed: failed[d],
                     });
@@ -338,6 +393,10 @@ impl Runner {
                         migrated: moved[d],
                         migration_sim_seconds: mig_sim[d],
                         migration_host_seconds: mig_host[d],
+                        migration_hidden_sim_seconds: mig_hidden[d],
+                        migration_wire_bytes: mig_wire[d],
+                        migration_full_bytes: mig_full[d],
+                        migration_used_delta: mig_delta[d],
                         restart_penalty_sim_seconds: penalty[d],
                         migration_failed: failed[d],
                     });

@@ -17,6 +17,12 @@
 //! RNG stream included — regardless of worker count or completion order.
 //! The pool reassembles results in device order before the caller touches
 //! them.  Only measured host times differ between runs.
+//!
+//! Migration stays out of the pool: checkpoint encode/transfer/restore
+//! (including the delta codec and the pre-copy overlap accounting) runs
+//! on the main thread at the round's mobility boundary, *before* the
+//! fan-out — so the overlap window is computed against a consistent
+//! pre-round snapshot and the workers never race on edge server state.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;

@@ -27,6 +27,12 @@ pub enum Error {
     #[error("checkpoint codec error: {0}")]
     Codec(String),
 
+    #[error(
+        "destination does not hold delta base (round {round}, hash {hash:#x}); \
+         sender must fall back to full encoding"
+    )]
+    DeltaBaseMissing { round: u64, hash: u64 },
+
     #[error("protocol error: {0}")]
     Proto(String),
 

@@ -18,7 +18,10 @@ use crate::error::Result;
 use crate::manifest::Manifest;
 use crate::metrics::RunReport;
 use crate::migration::{
-    codec::Checkpoint, transport::send_checkpoint_tcp, transport::TcpCheckpointServer, Strategy,
+    codec::{encode_for_transfer, Checkpoint, DeltaBase, ZSTD_LEVEL},
+    transport::send_checkpoint_tcp,
+    transport::TcpCheckpointServer,
+    Strategy,
 };
 use crate::mobility::Schedule;
 use crate::model::ModelMeta;
@@ -348,6 +351,11 @@ pub struct OverheadRow {
     pub simulated_s: f64,
     /// Device-relayed route, simulated.
     pub simulated_via_device_s: f64,
+    /// Wire bytes of the delta+zstd frame for a round-boundary move
+    /// (server half equals the shared broadcast base).
+    pub delta_bytes: usize,
+    /// 75 Mbps transfer of the delta frame, simulated.
+    pub simulated_delta_s: f64,
 }
 
 /// Measure checkpoint migration overhead for every split point.
@@ -372,12 +380,19 @@ pub fn overhead(meta: &ModelMeta, batch: usize) -> Result<Vec<OverheadRow>> {
         let server = TcpCheckpointServer::start(1)?;
         let (measured_s, bytes) = send_checkpoint_tcp(server.addr(), &ck)?;
         server.join()?;
+        // Round-boundary move: the server half still equals the round's
+        // broadcast, so the delta frame against that shared base is almost
+        // all zeros and zstd collapses it.
+        let base = DeltaBase::from_broadcast(ck.round, ck.server_params.clone());
+        let enc = encode_for_transfer(&ck, Some(&base), Some(ZSTD_LEVEL))?;
         rows.push(OverheadRow {
             sp,
             checkpoint_bytes: bytes,
             measured_s,
             simulated_s: net.migration_time(bytes),
             simulated_via_device_s: net.migration_time_via_device(bytes),
+            delta_bytes: enc.blob.len(),
+            simulated_delta_s: net.migration_time(enc.blob.len()),
         });
     }
     Ok(rows)
@@ -387,16 +402,18 @@ pub fn overhead(meta: &ModelMeta, batch: usize) -> Result<Vec<OverheadRow>> {
 pub fn render_overhead(rows: &[OverheadRow]) -> String {
     let mut out = String::from(
         "Migration overhead (paper: \"up to two seconds\")\n\
-         sp  checkpoint(MB)  measured-localhost(s)  simulated-75Mbps(s)  via-device(s)\n",
+         sp  checkpoint(MB)  measured-localhost(s)  simulated-75Mbps(s)  via-device(s)  delta+zstd(KB)  sim-delta(s)\n",
     );
     for r in rows {
         out.push_str(&format!(
-            "{}   {:>13.2}  {:>20.4}  {:>18.3}  {:>12.3}\n",
+            "{}   {:>13.2}  {:>20.4}  {:>18.3}  {:>12.3}  {:>14.1}  {:>12.4}\n",
             r.sp,
             r.checkpoint_bytes as f64 / 1e6,
             r.measured_s,
             r.simulated_s,
             r.simulated_via_device_s,
+            r.delta_bytes as f64 / 1e3,
+            r.simulated_delta_s,
         ));
     }
     out
@@ -491,6 +508,15 @@ mod tests {
             );
             assert!(r.measured_s < 2.0);
             assert!(r.simulated_via_device_s > r.simulated_s);
+            // Acceptance: delta+zstd wire bytes at most half the full frame.
+            assert!(
+                r.delta_bytes * 2 <= r.checkpoint_bytes,
+                "sp{} delta {} > 50% of full {}",
+                r.sp,
+                r.delta_bytes,
+                r.checkpoint_bytes
+            );
+            assert!(r.simulated_delta_s <= r.simulated_s);
         }
     }
 

@@ -24,6 +24,7 @@ fn usage() -> ! {
            info                         manifest / artifact summary\n\
            train [--rounds N] [--sp K] [--batch B] [--strategy fedfly|restart]\n\
                  [--move-at FRAC] [--samples N] [--sim] [--seed S] [--workers W]\n\
+                 [--full-migration] [--no-overlap]\n\
            fig3a | fig3b | fig3c        paper timing figures (simulated testbed)\n\
            fig4 [--frac F] [--rounds N] paper accuracy figure (real training)\n\
            overhead                     migration overhead table\n\
@@ -264,6 +265,12 @@ fn train(args: &Args) -> fedfly::Result<()> {
     if move_at >= 0.0 {
         cfg.schedule = Schedule::at_fraction(0, move_at, cfg.rounds, 1);
     }
+    if args.has("full-migration") {
+        cfg.delta_migration = false;
+    }
+    if args.has("no-overlap") {
+        cfg.overlap_migration = false;
+    }
 
     let meta = experiments::load_meta()?;
     // With workers > 1 every pool worker builds its own engine, so the
@@ -284,8 +291,16 @@ fn train(args: &Args) -> fedfly::Result<()> {
     }
     for s in report.summaries() {
         println!(
-            "device {}: {:.1}s sim/round effective, {} moves, migration {:.3}s host",
-            s.device, s.effective_time_per_round, s.moves, s.total_migration_host
+            "device {}: {:.1}s sim/round effective, {} moves ({} delta), \
+             migration {:.3}s host, {:.3}s sim hidden, {} wire bytes (full {})",
+            s.device,
+            s.effective_time_per_round,
+            s.moves,
+            s.delta_migrations,
+            s.total_migration_host,
+            s.total_migration_hidden,
+            s.total_migration_wire_bytes,
+            s.total_migration_full_bytes,
         );
     }
     let p = &report.perf;
@@ -293,6 +308,12 @@ fn train(args: &Args) -> fedfly::Result<()> {
         "perf: {} worker(s); train wall {:.3}s, fedavg {:.3}s, eval {:.3}s",
         p.workers, p.train_wall_seconds, p.aggregate_seconds, p.eval_seconds
     );
+    if p.migrations > 0 {
+        println!(
+            "  migrations: {} (encode {:.4}s, decode {:.4}s host)",
+            p.migrations, p.migration_encode_seconds, p.migration_decode_seconds
+        );
+    }
     for w in &p.workers_perf {
         println!(
             "  worker {}: busy {:.3}s, barrier wait {:.3}s, {} tasks, {} HLO execs ({:.3}s)",

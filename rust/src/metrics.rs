@@ -18,10 +18,23 @@ pub struct DeviceRound {
     pub loss: f32,
     /// Device moved at the start of this round.
     pub migrated: bool,
-    /// FedFly: simulated checkpoint-transfer overhead (seconds).
+    /// FedFly: simulated checkpoint-transfer overhead actually *charged*
+    /// to the device (seconds) — transfer time minus the overlap-hidden
+    /// portion.
     pub migration_sim_seconds: f64,
     /// FedFly: measured codec+transport seconds (localhost).
     pub migration_host_seconds: f64,
+    /// FedFly: simulated transfer seconds hidden behind the pre-copy
+    /// overlap window (charged + hidden = full transfer time).
+    pub migration_hidden_sim_seconds: f64,
+    /// Encoded bytes that crossed the wire for this migration (delta +
+    /// zstd when enabled; both attempts on a fallback).
+    pub migration_wire_bytes: u64,
+    /// Uncompressed full-checkpoint bytes — the baseline the delta path
+    /// saves against.
+    pub migration_full_bytes: u64,
+    /// The accepted transfer used the delta encoding.
+    pub migration_used_delta: bool,
     /// SplitFed restart: simulated catch-up cost (redone rounds).
     pub restart_penalty_sim_seconds: f64,
     /// FedFly transfer was lost/corrupted and fell back to restart.
@@ -69,6 +82,12 @@ pub struct RunPerf {
     pub aggregate_seconds: f64,
     /// Wall seconds in evaluation.
     pub eval_seconds: f64,
+    /// Checkpoint migrations performed (successful FedFly transfers).
+    pub migrations: usize,
+    /// Host seconds spent encoding checkpoints (delta + zstd).
+    pub migration_encode_seconds: f64,
+    /// Host seconds spent reassembling + decoding checkpoints.
+    pub migration_decode_seconds: f64,
     /// Per-worker breakdown (one entry for the serial path).
     pub workers_perf: Vec<WorkerPerf>,
 }
@@ -98,8 +117,16 @@ pub struct DeviceSummary {
     pub effective_time_per_round: f64,
     pub total_migration_sim: f64,
     pub total_migration_host: f64,
+    /// Simulated transfer seconds hidden by the pre-copy overlap.
+    pub total_migration_hidden: f64,
+    /// Encoded bytes shipped for this device's migrations.
+    pub total_migration_wire_bytes: u64,
+    /// Uncompressed full-checkpoint bytes those migrations represent.
+    pub total_migration_full_bytes: u64,
     pub total_restart_penalty: f64,
     pub moves: usize,
+    /// Migrations whose accepted transfer used the delta encoding.
+    pub delta_migrations: usize,
     /// FedFly transfers that were lost and fell back to restart.
     pub failed_migrations: usize,
 }
@@ -117,16 +144,24 @@ impl RunReport {
         let mut sim = 0.0;
         let mut mig_sim = 0.0;
         let mut mig_host = 0.0;
+        let mut mig_hidden = 0.0;
+        let mut wire_bytes = 0u64;
+        let mut full_bytes = 0u64;
         let mut penalty = 0.0;
         let mut moves = 0;
+        let mut delta_migrations = 0;
         let mut failed_migrations = 0;
         for r in &self.rounds {
             let d = &r.devices[device];
             sim += d.sim_seconds;
             mig_sim += d.migration_sim_seconds;
             mig_host += d.migration_host_seconds;
+            mig_hidden += d.migration_hidden_sim_seconds;
+            wire_bytes += d.migration_wire_bytes;
+            full_bytes += d.migration_full_bytes;
             penalty += d.restart_penalty_sim_seconds;
             moves += d.migrated as usize;
+            delta_migrations += d.migration_used_delta as usize;
             failed_migrations += d.migration_failed as usize;
         }
         let n = self.rounds.len().max(1) as f64;
@@ -136,8 +171,12 @@ impl RunReport {
             effective_time_per_round: (sim + mig_sim + penalty) / n,
             total_migration_sim: mig_sim,
             total_migration_host: mig_host,
+            total_migration_hidden: mig_hidden,
+            total_migration_wire_bytes: wire_bytes,
+            total_migration_full_bytes: full_bytes,
             total_restart_penalty: penalty,
             moves,
+            delta_migrations,
             failed_migrations,
         }
     }
@@ -167,12 +206,14 @@ impl RunReport {
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "round,device,edge,sim_seconds,host_seconds,loss,migrated,\
-             migration_sim_s,migration_host_s,restart_penalty_s,accuracy\n",
+             migration_sim_s,migration_host_s,migration_hidden_s,\
+             migration_wire_bytes,migration_full_bytes,used_delta,\
+             restart_penalty_s,accuracy\n",
         );
         for r in &self.rounds {
             for d in &r.devices {
                 out.push_str(&format!(
-                    "{},{},{},{:.6},{:.6},{:.6},{},{:.6},{:.6},{:.6},{}\n",
+                    "{},{},{},{:.6},{:.6},{:.6},{},{:.6},{:.6},{:.6},{},{},{},{:.6},{}\n",
                     r.round,
                     d.device,
                     d.edge,
@@ -182,6 +223,10 @@ impl RunReport {
                     d.migrated as u8,
                     d.migration_sim_seconds,
                     d.migration_host_seconds,
+                    d.migration_hidden_sim_seconds,
+                    d.migration_wire_bytes,
+                    d.migration_full_bytes,
+                    d.migration_used_delta as u8,
                     d.restart_penalty_sim_seconds,
                     r.accuracy.map_or(String::new(), |a| format!("{a:.4}")),
                 ));
@@ -212,10 +257,23 @@ impl RunReport {
                                 ("total_migration_sim", json::num(s.total_migration_sim)),
                                 ("total_migration_host", json::num(s.total_migration_host)),
                                 (
+                                    "total_migration_hidden",
+                                    json::num(s.total_migration_hidden),
+                                ),
+                                (
+                                    "total_migration_wire_bytes",
+                                    json::num(s.total_migration_wire_bytes as f64),
+                                ),
+                                (
+                                    "total_migration_full_bytes",
+                                    json::num(s.total_migration_full_bytes as f64),
+                                ),
+                                (
                                     "total_restart_penalty",
                                     json::num(s.total_restart_penalty),
                                 ),
                                 ("moves", json::num(s.moves as f64)),
+                                ("delta_migrations", json::num(s.delta_migrations as f64)),
                             ])
                         })
                         .collect(),
@@ -246,6 +304,15 @@ impl RunReport {
                     ("train_wall_seconds", json::num(self.perf.train_wall_seconds)),
                     ("aggregate_seconds", json::num(self.perf.aggregate_seconds)),
                     ("eval_seconds", json::num(self.perf.eval_seconds)),
+                    ("migrations", json::num(self.perf.migrations as f64)),
+                    (
+                        "migration_encode_seconds",
+                        json::num(self.perf.migration_encode_seconds),
+                    ),
+                    (
+                        "migration_decode_seconds",
+                        json::num(self.perf.migration_decode_seconds),
+                    ),
                     (
                         "workers_perf",
                         json::arr(
@@ -300,6 +367,10 @@ mod tests {
                     migrated,
                     migration_sim_seconds: if migrated { 1.5 } else { 0.0 },
                     migration_host_seconds: if migrated { 0.01 } else { 0.0 },
+                    migration_hidden_sim_seconds: if migrated { 0.25 } else { 0.0 },
+                    migration_wire_bytes: if migrated { 4000 } else { 0 },
+                    migration_full_bytes: if migrated { 10_000 } else { 0 },
+                    migration_used_delta: migrated,
                     restart_penalty_sim_seconds: penalty,
                     migration_failed: false,
                 },
@@ -313,6 +384,10 @@ mod tests {
                     migrated: false,
                     migration_sim_seconds: 0.0,
                     migration_host_seconds: 0.0,
+                    migration_hidden_sim_seconds: 0.0,
+                    migration_wire_bytes: 0,
+                    migration_full_bytes: 0,
+                    migration_used_delta: false,
                     restart_penalty_sim_seconds: 0.0,
                     migration_failed: false,
                 },
@@ -342,6 +417,22 @@ mod tests {
         let s1 = r.device_summary(1);
         assert_eq!(s1.moves, 0);
         assert!((s1.effective_time_per_round - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn summaries_track_wire_and_overlap() {
+        let r = report();
+        let s0 = r.device_summary(0);
+        // one migrated round in the fixture
+        assert_eq!(s0.total_migration_wire_bytes, 4000);
+        assert_eq!(s0.total_migration_full_bytes, 10_000);
+        assert_eq!(s0.delta_migrations, 1);
+        assert!((s0.total_migration_hidden - 0.25).abs() < 1e-9);
+        // hidden time must NOT inflate the effective per-round time
+        assert!((s0.effective_time_per_round - (30.0 + 1.5 + 30.0) / 3.0).abs() < 1e-9);
+        let s1 = r.device_summary(1);
+        assert_eq!(s1.total_migration_wire_bytes, 0);
+        assert_eq!(s1.delta_migrations, 0);
     }
 
     #[test]

@@ -4,15 +4,30 @@
 //! a trailing CRC32 over everything before it.  All integers are LE.
 //! Float payloads are bit-preserved — migration must be lossless for the
 //! bit-exact-resume invariant to hold.
+//!
+//! VERSION 2 adds a second frame kind: the delta frame ("FDFD") encodes
+//! `server_params`/`server_momentum` as XOR bit-deltas against a
+//! `(round, hash)`-identified [`DeltaBase`] both endpoints hold — the
+//! round's global broadcast.  Moves fire at round boundaries, where the
+//! server half equals the broadcast, so the params delta is all zero bits
+//! and the zstd envelope collapses it to almost nothing (paper §VI names
+//! checkpoint communication cost as open future work).  XOR of equal bit
+//! patterns is zero and XOR is self-inverse, so the roundtrip is bit-exact
+//! for every payload including NaN and -0.0.
+
+use std::borrow::Cow;
 
 use crate::error::{Error, Result};
 use crate::util::bytes::{put_f32, put_f32_slice, put_u32, put_u64, Reader};
 
-const MAGIC: &[u8; 4] = b"FDFL";
+/// Magic for a full (self-contained) checkpoint frame.
+pub const MAGIC: &[u8; 4] = b"FDFL";
 /// Magic for the zstd-compressed envelope (paper §VI "communication
 /// overhead" future work: compress the checkpoint before migration).
-const MAGIC_Z: &[u8; 4] = b"FDFZ";
-pub const VERSION: u32 = 1;
+pub const MAGIC_Z: &[u8; 4] = b"FDFZ";
+/// Magic for a delta frame: XOR bit-deltas against a shared [`DeltaBase`].
+pub const MAGIC_D: &[u8; 4] = b"FDFD";
+pub const VERSION: u32 = 2;
 
 /// Default zstd level for checkpoint compression: fast enough that the
 /// codec never dominates the 75 Mbps link it is trying to save.
@@ -84,22 +99,27 @@ pub fn encode(ck: &Checkpoint) -> Vec<u8> {
     b
 }
 
-/// Encode with zstd compression (a `FDFZ` envelope around [`encode`]'s
-/// output).  Trained f32 weights are high-entropy so ratios are modest,
-/// but zero momentum/gradient stretches early in training compress well.
-pub fn encode_compressed(ck: &Checkpoint, level: i32) -> Result<Vec<u8>> {
-    let raw = encode(ck);
-    let compressed = zstd::bulk::compress(&raw, level)
+/// Wrap any raw frame (full or delta) in the `FDFZ` zstd envelope.
+pub fn compress_envelope(raw: &[u8], level: i32) -> Result<Vec<u8>> {
+    let compressed = zstd::bulk::compress(raw, level)
         .map_err(|e| Error::Codec(format!("zstd compress: {e}")))?;
     let mut out = Vec::with_capacity(compressed.len() + 16);
     out.extend_from_slice(MAGIC_Z);
-    crate::util::bytes::put_u64(&mut out, raw.len() as u64);
+    put_u64(&mut out, raw.len() as u64);
     out.extend_from_slice(&compressed);
     Ok(out)
 }
 
-/// Decode either envelope: raw (`FDFL...`) or compressed (`FDFZ`).
-pub fn decode_auto(bytes: &[u8]) -> Result<Checkpoint> {
+/// Encode with zstd compression (a `FDFZ` envelope around [`encode`]'s
+/// output).  Trained f32 weights are high-entropy so ratios are modest,
+/// but zero momentum/gradient stretches early in training compress well.
+pub fn encode_compressed(ck: &Checkpoint, level: i32) -> Result<Vec<u8>> {
+    compress_envelope(&encode(ck), level)
+}
+
+/// Strip the zstd envelope if present, yielding the inner frame (full
+/// `FDFL` or delta `FDFD`) without copying when the input is already raw.
+pub fn unwrap_envelope(bytes: &[u8]) -> Result<Cow<'_, [u8]>> {
     if bytes.len() >= 12 && &bytes[..4] == MAGIC_Z {
         let mut r = Reader::new(&bytes[4..12]);
         let raw_len = r.u64().map_err(Error::Codec)? as usize;
@@ -108,9 +128,29 @@ pub fn decode_auto(bytes: &[u8]) -> Result<Checkpoint> {
         }
         let raw = zstd::bulk::decompress(&bytes[12..], raw_len)
             .map_err(|e| Error::Codec(format!("zstd decompress: {e}")))?;
-        return decode(&raw);
+        return Ok(Cow::Owned(raw));
     }
-    decode(bytes)
+    Ok(Cow::Borrowed(bytes))
+}
+
+/// Decode any frame kind with an optional delta base: unwraps the zstd
+/// envelope, then dispatches on the inner magic.  A delta frame without a
+/// matching base fails with [`Error::DeltaBaseMissing`] so the sender can
+/// fall back to full encoding.
+pub fn decode_with(bytes: &[u8], base: Option<&DeltaBase>) -> Result<Checkpoint> {
+    let raw = unwrap_envelope(bytes)?;
+    let raw = raw.as_ref();
+    if raw.len() >= 4 && &raw[..4] == MAGIC_D {
+        decode_delta(raw, base)
+    } else {
+        decode(raw)
+    }
+}
+
+/// Decode either self-contained envelope: raw (`FDFL...`) or compressed
+/// (`FDFZ`).  Delta frames need a base — use [`decode_with`] for those.
+pub fn decode_auto(bytes: &[u8]) -> Result<Checkpoint> {
+    decode_with(bytes, None)
 }
 
 /// Decode and validate a checkpoint.
@@ -129,9 +169,11 @@ pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
     let mut r = Reader::new(&body[4..]);
     let e = |m: String| Error::Codec(m);
     let version = r.u32().map_err(e)?;
-    if version != VERSION {
+    // VERSION 2 only added the (separately-tagged) delta frame; the full
+    // frame layout is unchanged, so v1 full frames still decode.
+    if !(1..=VERSION).contains(&version) {
         return Err(Error::Codec(format!(
-            "unsupported checkpoint version {version} (supported: {VERSION})"
+            "unsupported checkpoint version {version} (supported: 1..={VERSION})"
         )));
     }
     let device_id = r.u64().map_err(e)?;
@@ -169,6 +211,263 @@ pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
         server_momentum,
         grad_smashed,
         rng_state,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Delta frames (VERSION 2)
+
+/// The shared model a delta frame is XORed against, identified on the wire
+/// by `(round, hash)` so the destination can prove it holds the same bits.
+///
+/// The canonical base is [`DeltaBase::from_broadcast`]: the round's global
+/// broadcast (server half) with zero optimizer state — the one tensor
+/// every edge provably holds, because aggregation ships it to all of them.
+#[derive(Clone, Debug)]
+pub struct DeltaBase {
+    round: u64,
+    server_params: Vec<f32>,
+    server_momentum: Vec<f32>,
+    hash: u64,
+}
+
+impl DeltaBase {
+    pub fn new(round: u64, server_params: Vec<f32>, server_momentum: Vec<f32>) -> Self {
+        let hash = base_hash(round, &server_params, &server_momentum);
+        DeltaBase {
+            round,
+            server_params,
+            server_momentum,
+            hash,
+        }
+    }
+
+    /// The base every destination edge holds: the round's global broadcast
+    /// (server half), with zero optimizer state by convention.
+    pub fn from_broadcast(round: u64, server_params: Vec<f32>) -> Self {
+        let n = server_params.len();
+        DeltaBase::new(round, server_params, vec![0.0; n])
+    }
+
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    pub fn hash(&self) -> u64 {
+        self.hash
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.server_params.len()
+    }
+}
+
+/// FNV-1a over the round and every payload bit: any difference in the base
+/// model changes the id, so a stale base can never silently produce a
+/// wrong-but-valid decode.
+fn base_hash(round: u64, params: &[f32], momentum: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    eat(&round.to_le_bytes());
+    for p in params {
+        eat(&p.to_bits().to_le_bytes());
+    }
+    for m in momentum {
+        eat(&m.to_bits().to_le_bytes());
+    }
+    h
+}
+
+/// Encode a checkpoint as a delta frame against `base`.  The layout
+/// mirrors [`encode`] with `(base_round, base_hash)` inserted after the
+/// loss field and params/momentum stored as XORed f32 bit patterns —
+/// 16 bytes larger than the full frame before compression, but the XOR of
+/// a round-boundary checkpoint against the broadcast is all zero bits, so
+/// the zstd envelope is what makes it small.
+pub fn encode_delta(ck: &Checkpoint, base: &DeltaBase) -> Result<Vec<u8>> {
+    if ck.server_params.len() != base.server_params.len()
+        || ck.server_momentum.len() != base.server_momentum.len()
+    {
+        return Err(Error::Codec(format!(
+            "delta base shape mismatch: checkpoint {}+{} vs base {}+{}",
+            ck.server_params.len(),
+            ck.server_momentum.len(),
+            base.server_params.len(),
+            base.server_momentum.len()
+        )));
+    }
+    let mut b = Vec::with_capacity(ck.wire_bytes() + 16);
+    b.extend_from_slice(MAGIC_D);
+    put_u32(&mut b, VERSION);
+    put_u64(&mut b, ck.device_id);
+    put_u32(&mut b, ck.sp);
+    put_u64(&mut b, ck.round);
+    put_u64(&mut b, ck.epoch);
+    put_u64(&mut b, ck.batch_idx);
+    put_f32(&mut b, ck.loss);
+    put_u64(&mut b, base.round);
+    put_u64(&mut b, base.hash);
+    put_u64(&mut b, ck.server_params.len() as u64);
+    for (v, bv) in ck.server_params.iter().zip(&base.server_params) {
+        put_u32(&mut b, v.to_bits() ^ bv.to_bits());
+    }
+    put_u64(&mut b, ck.server_momentum.len() as u64);
+    for (v, bv) in ck.server_momentum.iter().zip(&base.server_momentum) {
+        put_u32(&mut b, v.to_bits() ^ bv.to_bits());
+    }
+    put_f32_slice(&mut b, &ck.grad_smashed);
+    for s in ck.rng_state {
+        put_u64(&mut b, s);
+    }
+    let crc = crc32fast::hash(&b);
+    put_u32(&mut b, crc);
+    Ok(b)
+}
+
+/// Peek the `(base_round, base_hash)` a raw (already-unwrapped) delta
+/// frame requires, without decoding it.  `None` for non-delta frames.
+pub fn delta_base_id(raw: &[u8]) -> Option<(u64, u64)> {
+    if raw.len() < 64 || &raw[..4] != MAGIC_D {
+        return None;
+    }
+    let round = u64::from_le_bytes(raw[48..56].try_into().unwrap());
+    let hash = u64::from_le_bytes(raw[56..64].try_into().unwrap());
+    Some((round, hash))
+}
+
+/// Decode and validate a delta frame against `base`.  A missing or
+/// mismatched base yields [`Error::DeltaBaseMissing`] carrying the id the
+/// frame requires, which the transport turns into a fall-back-to-full
+/// retry (Ack code 5 on the socket path).
+pub fn decode_delta(bytes: &[u8], base: Option<&DeltaBase>) -> Result<Checkpoint> {
+    if bytes.len() < 12 {
+        return Err(Error::Codec("delta checkpoint too short".into()));
+    }
+    let (body, crc_bytes) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    if crc32fast::hash(body) != stored {
+        return Err(Error::Codec("crc mismatch (corrupt delta checkpoint)".into()));
+    }
+    if &body[..4] != MAGIC_D {
+        return Err(Error::Codec("bad delta magic".into()));
+    }
+    let mut r = Reader::new(&body[4..]);
+    let e = |m: String| Error::Codec(m);
+    let version = r.u32().map_err(e)?;
+    if version != VERSION {
+        return Err(Error::Codec(format!(
+            "unsupported delta frame version {version} (supported: {VERSION})"
+        )));
+    }
+    let device_id = r.u64().map_err(e)?;
+    let sp = r.u32().map_err(e)?;
+    let round = r.u64().map_err(e)?;
+    let epoch = r.u64().map_err(e)?;
+    let batch_idx = r.u64().map_err(e)?;
+    let loss = r.f32().map_err(e)?;
+    let base_round = r.u64().map_err(e)?;
+    let base_hash = r.u64().map_err(e)?;
+    let Some(base) = base else {
+        return Err(Error::DeltaBaseMissing {
+            round: base_round,
+            hash: base_hash,
+        });
+    };
+    if base.round != base_round || base.hash != base_hash {
+        return Err(Error::DeltaBaseMissing {
+            round: base_round,
+            hash: base_hash,
+        });
+    }
+    let np = r.u64().map_err(e)? as usize;
+    if np != base.server_params.len() {
+        return Err(Error::Codec(format!(
+            "delta params length {np} does not match base {}",
+            base.server_params.len()
+        )));
+    }
+    let mut server_params = Vec::with_capacity(np);
+    for bv in &base.server_params {
+        let x = r.u32().map_err(e)?;
+        server_params.push(f32::from_bits(x ^ bv.to_bits()));
+    }
+    let nm = r.u64().map_err(e)? as usize;
+    if nm != base.server_momentum.len() {
+        return Err(Error::Codec(format!(
+            "delta momentum length {nm} does not match base {}",
+            base.server_momentum.len()
+        )));
+    }
+    let mut server_momentum = Vec::with_capacity(nm);
+    for bv in &base.server_momentum {
+        let x = r.u32().map_err(e)?;
+        server_momentum.push(f32::from_bits(x ^ bv.to_bits()));
+    }
+    let grad_smashed = r.f32_vec().map_err(e)?;
+    let mut rng_state = [0u64; 4];
+    for s in &mut rng_state {
+        *s = r.u64().map_err(e)?;
+    }
+    if r.remaining() != 0 {
+        return Err(Error::Codec(format!(
+            "{} trailing bytes after delta checkpoint",
+            r.remaining()
+        )));
+    }
+    Ok(Checkpoint {
+        device_id,
+        sp,
+        round,
+        epoch,
+        batch_idx,
+        loss,
+        server_params,
+        server_momentum,
+        grad_smashed,
+        rng_state,
+    })
+}
+
+/// One encoded transfer attempt: the wire blob plus how it was produced.
+#[derive(Clone, Debug)]
+pub struct EncodedCheckpoint {
+    pub blob: Vec<u8>,
+    /// Whether the blob is a delta frame (true) or a full frame (false).
+    pub used_delta: bool,
+    /// Host seconds spent encoding (and compressing, if enabled).
+    pub encode_seconds: f64,
+}
+
+/// Encode for the wire: delta against `base` when the shapes line up,
+/// full otherwise, then (optionally) the zstd envelope.
+pub fn encode_for_transfer(
+    ck: &Checkpoint,
+    base: Option<&DeltaBase>,
+    zstd_level: Option<i32>,
+) -> Result<EncodedCheckpoint> {
+    let t0 = std::time::Instant::now();
+    let (raw, used_delta) = match base {
+        Some(b)
+            if b.server_params.len() == ck.server_params.len()
+                && b.server_momentum.len() == ck.server_momentum.len() =>
+        {
+            (encode_delta(ck, b)?, true)
+        }
+        _ => (encode(ck), false),
+    };
+    let blob = match zstd_level {
+        Some(level) => compress_envelope(&raw, level)?,
+        None => raw,
+    };
+    Ok(EncodedCheckpoint {
+        blob,
+        used_delta,
+        encode_seconds: t0.elapsed().as_secs_f64(),
     })
 }
 
@@ -321,5 +620,168 @@ mod tests {
         let n = blob.len();
         blob[n / 2] ^= 0xFF;
         assert!(decode_auto(&blob).is_err());
+    }
+
+    // -----------------------------------------------------------------------
+    // Delta frames
+
+    /// A base sharing the checkpoint's shapes but (generally) not its bits.
+    fn base_for(ck: &Checkpoint, seed: u64) -> DeltaBase {
+        let mut r = Rng::new(seed);
+        DeltaBase::new(
+            ck.round,
+            (0..ck.server_params.len())
+                .map(|_| r.gaussian() as f32)
+                .collect(),
+            vec![0.0; ck.server_momentum.len()],
+        )
+    }
+
+    #[test]
+    fn delta_roundtrip_bit_exact() {
+        let ck = sample(20, 1000);
+        let base = base_for(&ck, 21);
+        let out = decode_delta(&encode_delta(&ck, &base).unwrap(), Some(&base)).unwrap();
+        assert_eq!(ck, out);
+        for (a, b) in ck.server_params.iter().zip(&out.server_params) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in ck.server_momentum.iter().zip(&out.server_momentum) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn delta_roundtrip_preserves_special_floats() {
+        // NaN / -0.0 on BOTH sides of the XOR: the payload and the base.
+        let mut ck = sample(22, 4);
+        ck.server_params = vec![0.0, -0.0, f32::NAN, f32::INFINITY];
+        ck.server_momentum = vec![f32::NAN, -0.0, 1.5, f32::NEG_INFINITY];
+        let base = DeltaBase::new(
+            ck.round,
+            vec![f32::NAN, 0.0, -0.0, f32::INFINITY],
+            vec![-0.0, f32::NAN, 0.0, 2.5],
+        );
+        let out = decode_delta(&encode_delta(&ck, &base).unwrap(), Some(&base)).unwrap();
+        for (a, b) in ck.server_params.iter().zip(&out.server_params) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in ck.server_momentum.iter().zip(&out.server_momentum) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn prop_delta_roundtrip_random() {
+        use crate::util::prop::forall;
+        forall(30, |r| {
+            let ck = sample(r.next_u64(), r.below(3000));
+            let base = base_for(&ck, r.next_u64());
+            let blob = encode_delta(&ck, &base).unwrap();
+            assert_eq!(blob.len(), ck.wire_bytes() + 16, "delta frame size");
+            assert_eq!(decode_delta(&blob, Some(&base)).unwrap(), ck);
+            // and through the zstd envelope + auto-dispatch
+            let z = compress_envelope(&blob, ZSTD_LEVEL).unwrap();
+            assert_eq!(decode_with(&z, Some(&base)).unwrap(), ck);
+        });
+    }
+
+    #[test]
+    fn delta_missing_base_reports_required_id() {
+        let ck = sample(23, 64);
+        let base = base_for(&ck, 24);
+        let blob = encode_delta(&ck, &base).unwrap();
+        match decode_delta(&blob, None) {
+            Err(Error::DeltaBaseMissing { round, hash }) => {
+                assert_eq!(round, base.round());
+                assert_eq!(hash, base.hash());
+            }
+            other => panic!("expected DeltaBaseMissing, got {other:?}"),
+        }
+        assert_eq!(delta_base_id(&blob), Some((base.round(), base.hash())));
+        assert_eq!(delta_base_id(&encode(&ck)), None);
+    }
+
+    #[test]
+    fn delta_wrong_base_rejected() {
+        let ck = sample(25, 64);
+        let base = base_for(&ck, 26);
+        let blob = encode_delta(&ck, &base).unwrap();
+        // same shape, different bits -> different hash -> rejected, never
+        // a silent wrong decode
+        let wrong = base_for(&ck, 27);
+        assert!(matches!(
+            decode_delta(&blob, Some(&wrong)),
+            Err(Error::DeltaBaseMissing { .. })
+        ));
+        // same bits, different round -> also rejected
+        let stale = DeltaBase::new(ck.round + 1, vec![0.0; 64], vec![0.0; 64]);
+        assert!(matches!(
+            decode_delta(&blob, Some(&stale)),
+            Err(Error::DeltaBaseMissing { .. })
+        ));
+    }
+
+    #[test]
+    fn delta_corruption_detected_anywhere() {
+        let ck = sample(28, 256);
+        let base = base_for(&ck, 29);
+        let blob = encode_delta(&ck, &base).unwrap();
+        let mut r = Rng::new(30);
+        for _ in 0..32 {
+            let mut bad = blob.clone();
+            let i = r.below(bad.len());
+            bad[i] ^= 1 << r.below(8);
+            assert!(
+                decode_delta(&bad, Some(&base)).is_err(),
+                "flip at byte {i} went undetected"
+            );
+        }
+        for cut in [0, 1, 11, blob.len() / 2, blob.len() - 1] {
+            assert!(decode_delta(&blob[..cut], Some(&base)).is_err());
+        }
+    }
+
+    #[test]
+    fn encode_for_transfer_falls_back_without_matching_shape() {
+        let ck = sample(31, 100);
+        // no base at all -> full
+        let full = encode_for_transfer(&ck, None, None).unwrap();
+        assert!(!full.used_delta);
+        assert_eq!(decode_with(&full.blob, None).unwrap(), ck);
+        // base with wrong shape -> full, not an error
+        let short = DeltaBase::from_broadcast(ck.round, vec![0.0; 10]);
+        let fb = encode_for_transfer(&ck, Some(&short), Some(ZSTD_LEVEL)).unwrap();
+        assert!(!fb.used_delta);
+        assert_eq!(decode_with(&fb.blob, None).unwrap(), ck);
+        // matching base -> delta
+        let base = base_for(&ck, 32);
+        let d = encode_for_transfer(&ck, Some(&base), Some(ZSTD_LEVEL)).unwrap();
+        assert!(d.used_delta);
+        assert_eq!(decode_with(&d.blob, Some(&base)).unwrap(), ck);
+    }
+
+    #[test]
+    fn boundary_move_delta_zstd_halves_wire_bytes() {
+        // A round-boundary move: server params equal the broadcast base
+        // (XOR = all zero bits), momentum is live optimizer state at one
+        // scale.  The acceptance bar: delta+zstd <= 50% of the full frame.
+        let n = 50_000;
+        let mut r = Rng::new(33);
+        let params: Vec<f32> = (0..n).map(|_| r.gaussian() as f32).collect();
+        let mut ck = sample(34, 0);
+        ck.server_params = params.clone();
+        ck.server_momentum = (0..n).map(|_| (r.gaussian() * 0.01) as f32).collect();
+        ck.grad_smashed = (0..1000).map(|_| r.gaussian() as f32).collect();
+        let base = DeltaBase::from_broadcast(ck.round, params);
+        let full = encode(&ck).len();
+        let enc = encode_for_transfer(&ck, Some(&base), Some(ZSTD_LEVEL)).unwrap();
+        assert!(enc.used_delta);
+        assert!(
+            enc.blob.len() * 2 <= full,
+            "delta+zstd too big: {} of {full} full bytes",
+            enc.blob.len()
+        );
+        assert_eq!(decode_with(&enc.blob, Some(&base)).unwrap(), ck);
     }
 }

@@ -14,8 +14,10 @@
 pub mod codec;
 pub mod transport;
 
-pub use codec::{decode, encode, Checkpoint};
-pub use transport::{InMemTransport, TcpCheckpointServer, Transport};
+pub use codec::{decode, encode, Checkpoint, DeltaBase};
+pub use transport::{
+    InMemTransport, StreamAssembler, TcpCheckpointServer, TcpOpts, TransferStats, Transport,
+};
 
 /// What happens to edge-side training state when a device moves.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -1,29 +1,165 @@
 //! Checkpoint transfer between edge servers.
 //!
 //! The paper transfers checkpointed data "via a socket" (§IV Step 8).
-//! [`TcpCheckpointServer`]/[`send_checkpoint_tcp`] implement exactly that
-//! over `std::net`; [`InMemTransport`] is the in-process equivalent used
-//! by the single-process coordinator (same codec, same semantics, no
-//! kernel round-trip).  Both report the measured wall-clock transfer time
-//! so the overhead table can contrast measured (localhost) vs simulated
-//! (75 Mbps testbed) costs.
+//! [`TcpCheckpointServer`]/[`send_checkpoint_tcp_opts`] implement exactly
+//! that over `std::net`; [`InMemTransport`] is the in-process equivalent
+//! used by the single-process coordinator (same codec, same framing, no
+//! kernel round-trip).  Both report [`TransferStats`] so the overhead
+//! table can contrast measured (localhost) vs simulated (75 Mbps testbed)
+//! costs on the bytes that actually crossed the wire.
+//!
+//! Transfers are chunked: the sender announces `CheckpointBegin` with the
+//! encoded length, then streams `CheckpointChunk` frames.  The receiver
+//! feeds them to a [`StreamAssembler`], which validates the magic as soon
+//! as four bytes exist and CRCs raw frames incrementally — corruption is
+//! detected while bytes are still arriving, and each accepted connection
+//! runs on its own thread so concurrent migrations never queue behind one
+//! slow stream.
+//!
+//! Delta encoding (codec VERSION 2) rides on top: a sender with a
+//! [`DeltaBase`] ships the XOR delta frame; a destination that cannot
+//! prove it holds the base answers Ack code 5, and the sender falls back
+//! to a full frame on the same connection, charging the wire for both.
 
 use std::collections::{HashMap, VecDeque};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
-use crate::migration::codec::{decode, encode, Checkpoint};
-use crate::proto::{read_msg, write_msg, Msg};
+use crate::migration::codec::{
+    self, decode, encode_for_transfer, Checkpoint, DeltaBase, ZSTD_LEVEL,
+};
+use crate::proto::{read_msg, write_msg, Msg, MAX_PAYLOAD};
+
+/// Default streaming chunk size: large enough to amortize frame overhead,
+/// small enough that the receiver's incremental CRC overlaps the socket.
+pub const DEFAULT_CHUNK_BYTES: usize = 256 * 1024;
+
+/// What one checkpoint transfer cost, on the wire and on the host.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransferStats {
+    /// Measured wall-clock seconds for the whole transfer.
+    pub host_seconds: f64,
+    /// Encoded bytes that crossed the wire — all attempts, so a delta
+    /// rejection followed by a full resend charges both.
+    pub wire_bytes: usize,
+    /// Size of the uncompressed full frame (`Checkpoint::wire_bytes()`),
+    /// the baseline the delta path is saving against.
+    pub full_bytes: usize,
+    /// Whether the checkpoint that was *accepted* was a delta frame.
+    pub used_delta: bool,
+    /// Host seconds spent encoding (all attempts).
+    pub encode_seconds: f64,
+    /// Host seconds spent reassembling + decoding at the destination.
+    pub decode_seconds: f64,
+}
 
 /// A checkpoint transfer mechanism between a source and destination edge.
 pub trait Transport {
-    /// Ship `ck` to destination edge `dest`; returns measured seconds.
-    fn send(&self, dest: usize, ck: &Checkpoint) -> Result<f64>;
+    /// Ship `ck` to destination edge `dest`; returns what it cost.
+    fn send(&self, dest: usize, ck: &Checkpoint) -> Result<TransferStats>;
     /// Take the checkpoint for `device` at edge `dest`, if one arrived.
     fn receive(&self, dest: usize, device: u64) -> Result<Option<Checkpoint>>;
+}
+
+// ---------------------------------------------------------------------------
+// Streaming reassembly
+
+/// Reassembles a chunked checkpoint stream, validating what can be
+/// validated before the stream completes: the declared length up front,
+/// the magic at four bytes, overrun on every push, and — for raw (`FDFL`
+/// / `FDFD`) frames — an incremental CRC32 that finalizes for free when
+/// the last chunk lands.  Compressed (`FDFZ`) streams defer integrity to
+/// the CRC inside the decompressed frame.
+pub struct StreamAssembler {
+    total: usize,
+    buf: Vec<u8>,
+    hasher: crc32fast::Hasher,
+    hashed: usize,
+    /// `None` until the magic is known; `Some(true)` for raw frames whose
+    /// trailing CRC we stream-verify, `Some(false)` for zstd envelopes.
+    check_crc: Option<bool>,
+}
+
+impl StreamAssembler {
+    pub fn new(total: usize) -> Result<Self> {
+        if total < 12 || total as u64 > MAX_PAYLOAD {
+            return Err(Error::Codec(format!(
+                "absurd checkpoint stream length {total}"
+            )));
+        }
+        Ok(StreamAssembler {
+            total,
+            buf: Vec::with_capacity(total),
+            hasher: crc32fast::Hasher::new(),
+            hashed: 0,
+            check_crc: None,
+        })
+    }
+
+    pub fn received(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.buf.len() == self.total
+    }
+
+    /// Append one chunk, failing fast on overrun or a bad magic.
+    pub fn push(&mut self, chunk: &[u8]) -> Result<()> {
+        if self.buf.len() + chunk.len() > self.total {
+            return Err(Error::Codec(format!(
+                "checkpoint stream overruns declared length {} ({} received + {} pushed)",
+                self.total,
+                self.buf.len(),
+                chunk.len()
+            )));
+        }
+        self.buf.extend_from_slice(chunk);
+        if self.check_crc.is_none() && self.buf.len() >= 4 {
+            let head = &self.buf[..4];
+            self.check_crc = Some(if head == codec::MAGIC || head == codec::MAGIC_D {
+                true
+            } else if head == codec::MAGIC_Z {
+                false
+            } else {
+                return Err(Error::Codec("bad magic in checkpoint stream".into()));
+            });
+        }
+        if self.check_crc == Some(true) {
+            // hash everything before the 4-byte CRC trailer as it arrives
+            let end = self.buf.len().min(self.total - 4);
+            if end > self.hashed {
+                self.hasher.update(&self.buf[self.hashed..end]);
+                self.hashed = end;
+            }
+        }
+        Ok(())
+    }
+
+    /// Complete the stream: length and (for raw frames) CRC must check out.
+    pub fn finish(self) -> Result<Vec<u8>> {
+        if self.buf.len() != self.total {
+            return Err(Error::Codec(format!(
+                "checkpoint stream truncated: {} of {} bytes",
+                self.buf.len(),
+                self.total
+            )));
+        }
+        if self.check_crc == Some(true) {
+            let stored =
+                u32::from_le_bytes(self.buf[self.total - 4..].try_into().unwrap());
+            if self.hasher.finalize() != stored {
+                return Err(Error::Codec(
+                    "crc mismatch in streamed checkpoint".into(),
+                ));
+            }
+        }
+        Ok(self.buf)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -35,14 +171,29 @@ pub trait Transport {
 /// first is received queues behind it rather than silently clobbering an
 /// unreceived checkpoint (which would lose server-side optimizer state —
 /// exactly the loss FedFly exists to prevent).
-#[derive(Default)]
+///
+/// Sends exercise the exact framing of the socket path — delta encode,
+/// zstd envelope, chunked [`StreamAssembler`] reassembly, base-aware
+/// decode — so the simulated wire bytes are the bytes TCP would carry.
+/// Sender-side and receiver-side base registries are deliberately
+/// separate: tests drop the receiver's copy to drive the fallback path.
 pub struct InMemTransport {
     mailboxes: Mutex<HashMap<(usize, u64), VecDeque<Checkpoint>>>,
+    send_bases: Mutex<HashMap<usize, DeltaBase>>,
+    recv_bases: Mutex<HashMap<usize, DeltaBase>>,
+    zstd_level: Option<i32>,
+    chunk_bytes: usize,
 }
 
 impl InMemTransport {
     pub fn new() -> Self {
-        Self::default()
+        InMemTransport {
+            mailboxes: Mutex::new(HashMap::new()),
+            send_bases: Mutex::new(HashMap::new()),
+            recv_bases: Mutex::new(HashMap::new()),
+            zstd_level: Some(ZSTD_LEVEL),
+            chunk_bytes: DEFAULT_CHUNK_BYTES,
+        }
     }
 
     /// Checkpoints queued for `device` at edge `dest`.
@@ -53,22 +204,80 @@ impl InMemTransport {
             .get(&(dest, device))
             .map_or(0, |q| q.len())
     }
+
+    /// Make `base` available at both endpoints for edge `dest` — the
+    /// coordinator calls this when the round's global model is broadcast,
+    /// since that is the moment every edge provably holds the same bits.
+    pub fn register_base(&self, dest: usize, base: DeltaBase) {
+        self.send_bases.lock().unwrap().insert(dest, base.clone());
+        self.recv_bases.lock().unwrap().insert(dest, base);
+    }
+
+    /// Forget all registered bases (sender and receiver side).
+    pub fn clear_bases(&self) {
+        self.send_bases.lock().unwrap().clear();
+        self.recv_bases.lock().unwrap().clear();
+    }
+
+    /// Drop only the *receiver's* copy of `dest`'s base: the sender still
+    /// emits a delta, the destination rejects it, and the send falls back
+    /// to full — the in-process analogue of an edge restarting mid-round.
+    pub fn drop_recv_base(&self, dest: usize) {
+        self.recv_bases.lock().unwrap().remove(&dest);
+    }
+}
+
+impl Default for InMemTransport {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Transport for InMemTransport {
-    fn send(&self, dest: usize, ck: &Checkpoint) -> Result<f64> {
+    fn send(&self, dest: usize, ck: &Checkpoint) -> Result<TransferStats> {
         let t0 = Instant::now();
-        // Encode/decode anyway: the in-process path must exercise the same
-        // codec as the socket path (and pays its real CPU cost).
-        let blob = encode(ck);
-        let decoded = decode(&blob)?;
+        let send_base = self.send_bases.lock().unwrap().get(&dest).cloned();
+        let recv_base = self.recv_bases.lock().unwrap().get(&dest).cloned();
+        let enc = encode_for_transfer(ck, send_base.as_ref(), self.zstd_level)?;
+        let mut stats = TransferStats {
+            wire_bytes: enc.blob.len(),
+            full_bytes: ck.wire_bytes(),
+            used_delta: enc.used_delta,
+            encode_seconds: enc.encode_seconds,
+            ..Default::default()
+        };
+        // chunk through the same assembler as the socket path
+        let deliver = |blob: &[u8]| -> Result<Checkpoint> {
+            let mut asm = StreamAssembler::new(blob.len())?;
+            for chunk in blob.chunks(self.chunk_bytes.max(1)) {
+                asm.push(chunk)?;
+            }
+            let frame = asm.finish()?;
+            codec::decode_with(&frame, recv_base.as_ref())
+        };
+        let td0 = Instant::now();
+        let decoded = match deliver(&enc.blob) {
+            Ok(d) => d,
+            Err(Error::DeltaBaseMissing { .. }) => {
+                // destination cannot prove it holds the base: re-encode
+                // full and charge the wire for both attempts
+                let retry = encode_for_transfer(ck, None, self.zstd_level)?;
+                stats.wire_bytes += retry.blob.len();
+                stats.used_delta = false;
+                stats.encode_seconds += retry.encode_seconds;
+                deliver(&retry.blob)?
+            }
+            Err(e) => return Err(e),
+        };
+        stats.decode_seconds = td0.elapsed().as_secs_f64();
         self.mailboxes
             .lock()
             .unwrap()
             .entry((dest, decoded.device_id))
             .or_default()
             .push_back(decoded);
-        Ok(t0.elapsed().as_secs_f64())
+        stats.host_seconds = t0.elapsed().as_secs_f64();
+        Ok(stats)
     }
 
     fn receive(&self, dest: usize, device: u64) -> Result<Option<Checkpoint>> {
@@ -87,65 +296,209 @@ impl Transport for InMemTransport {
 // ---------------------------------------------------------------------------
 // TCP transport (distributed mode; also used by the overhead bench)
 
-/// A destination edge server's checkpoint listener: accepts
-/// `CheckpointTransfer` frames and parks them for pickup.
-pub struct TcpCheckpointServer {
+/// State shared between the accept loop, the per-connection threads, and
+/// the owning [`TcpCheckpointServer`] handle.
+struct ServerShared {
     addr: SocketAddr,
-    inbox: Arc<Mutex<HashMap<u64, Checkpoint>>>,
+    inbox: Mutex<HashMap<u64, Checkpoint>>,
+    /// Delta bases the destination holds, keyed by base round.
+    bases: Mutex<HashMap<u64, DeltaBase>>,
+    completed: Mutex<usize>,
+    expected: usize,
+    done_tx: Mutex<Option<mpsc::Sender<()>>>,
+    stop: AtomicBool,
+}
+
+impl ServerShared {
+    /// Decode a fully-reassembled frame and park it; returns the ack code
+    /// (0 ok, 1 corrupt, 5 delta base missing — sender should resend full).
+    fn ingest(&self, device: u64, frame: Vec<u8>) -> u32 {
+        let raw = match codec::unwrap_envelope(&frame) {
+            Ok(r) => r,
+            Err(_) => return 1,
+        };
+        let raw = raw.as_ref();
+        let base = codec::delta_base_id(raw)
+            .and_then(|(round, _)| self.bases.lock().unwrap().get(&round).cloned());
+        let res = if raw.len() >= 4 && &raw[..4] == codec::MAGIC_D {
+            codec::decode_delta(raw, base.as_ref())
+        } else {
+            decode(raw)
+        };
+        match res {
+            Ok(ck) => {
+                self.inbox.lock().unwrap().insert(device, ck);
+                0
+            }
+            Err(Error::DeltaBaseMissing { .. }) => 5,
+            Err(_) => 1,
+        }
+    }
+
+    /// Count one successful transfer; at `expected`, signal done and poke
+    /// the accept loop awake so it can exit.
+    fn mark_completed(&self) {
+        let mut c = self.completed.lock().unwrap();
+        *c += 1;
+        if *c >= self.expected {
+            if let Some(tx) = self.done_tx.lock().unwrap().take() {
+                let _ = tx.send(());
+            }
+            self.stop.store(true, Ordering::SeqCst);
+            let _ = TcpStream::connect(self.addr);
+        }
+    }
+}
+
+/// One accepted connection: streams (or one-shot frames) until EOF/Bye.
+/// Lives on its own thread so a stalled sender never blocks another
+/// migration (the old server accepted and decoded serially).
+fn serve_conn(mut stream: TcpStream, shared: &ServerShared) {
+    let mut asm: Option<(u64, StreamAssembler)> = None;
+    loop {
+        let msg = match read_msg(&mut stream) {
+            Ok(m) => m,
+            Err(_) => return, // EOF or corrupt frame: drop the connection
+        };
+        match msg {
+            Msg::CheckpointBegin { device, total_len } => {
+                match StreamAssembler::new(total_len as usize) {
+                    Ok(a) => asm = Some((device, a)),
+                    Err(_) => {
+                        let _ = write_msg(&mut stream, &Msg::Ack { code: 1 });
+                        return;
+                    }
+                }
+            }
+            Msg::CheckpointChunk { device, data } => {
+                let pushed = match asm.as_mut() {
+                    Some((dev, a)) if *dev == device => a.push(&data),
+                    _ => {
+                        let _ = write_msg(&mut stream, &Msg::Ack { code: 2 });
+                        return;
+                    }
+                };
+                if pushed.is_err() {
+                    let _ = write_msg(&mut stream, &Msg::Ack { code: 1 });
+                    return;
+                }
+                let complete = match &asm {
+                    Some((_, a)) => a.is_complete(),
+                    None => false,
+                };
+                if complete {
+                    let (dev, a) = asm.take().unwrap();
+                    let code = match a.finish() {
+                        Ok(frame) => shared.ingest(dev, frame),
+                        Err(_) => 1,
+                    };
+                    let _ = write_msg(&mut stream, &Msg::Ack { code });
+                    if code == 0 {
+                        shared.mark_completed();
+                    }
+                    // keep the connection open: after a code-5 rejection
+                    // the sender retries with a full frame right here
+                }
+            }
+            // legacy one-shot transfer (small checkpoints / old senders)
+            Msg::CheckpointTransfer { device, blob } => {
+                let code = match StreamAssembler::new(blob.len()) {
+                    Ok(mut a) => match a.push(&blob) {
+                        Ok(()) => match a.finish() {
+                            Ok(frame) => shared.ingest(device, frame),
+                            Err(_) => 1,
+                        },
+                        Err(_) => 1,
+                    },
+                    Err(_) => 1,
+                };
+                let _ = write_msg(&mut stream, &Msg::Ack { code });
+                if code == 0 {
+                    shared.mark_completed();
+                }
+            }
+            Msg::Bye => return,
+            _ => {
+                let _ = write_msg(&mut stream, &Msg::Ack { code: 2 });
+                return;
+            }
+        }
+    }
+}
+
+/// A destination edge server's checkpoint listener: accepts chunked
+/// checkpoint streams (and legacy one-shot frames), each connection on
+/// its own thread, and parks decoded checkpoints for pickup.
+pub struct TcpCheckpointServer {
+    shared: Arc<ServerShared>,
     done_rx: Option<mpsc::Receiver<()>>,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
 impl TcpCheckpointServer {
-    /// Bind on 127.0.0.1:0 and serve `expected` transfers in a thread.
+    /// Bind on 127.0.0.1:0 and serve until `expected` transfers succeed.
     pub fn start(expected: usize) -> Result<Self> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
-        let inbox: Arc<Mutex<HashMap<u64, Checkpoint>>> = Arc::new(Mutex::new(HashMap::new()));
-        let inbox2 = inbox.clone();
         let (done_tx, done_rx) = mpsc::channel();
+        let shared = Arc::new(ServerShared {
+            addr,
+            inbox: Mutex::new(HashMap::new()),
+            bases: Mutex::new(HashMap::new()),
+            completed: Mutex::new(0),
+            expected,
+            done_tx: Mutex::new(Some(done_tx)),
+            stop: AtomicBool::new(false),
+        });
+        if expected == 0 {
+            if let Some(tx) = shared.done_tx.lock().unwrap().take() {
+                let _ = tx.send(());
+            }
+            shared.stop.store(true, Ordering::SeqCst);
+        }
+        let accept_shared = shared.clone();
         let handle = std::thread::spawn(move || {
-            for _ in 0..expected {
-                let Ok((mut stream, _)) = listener.accept() else {
+            let mut conns = Vec::new();
+            while !accept_shared.stop.load(Ordering::SeqCst) {
+                let Ok((stream, _)) = listener.accept() else {
                     break;
                 };
-                match read_msg(&mut stream) {
-                    Ok(Msg::CheckpointTransfer { device, blob }) => {
-                        match decode(&blob) {
-                            Ok(ck) => {
-                                inbox2.lock().unwrap().insert(device, ck);
-                                let _ = write_msg(&mut stream, &Msg::Ack { code: 0 });
-                            }
-                            Err(_) => {
-                                let _ = write_msg(&mut stream, &Msg::Ack { code: 1 });
-                            }
-                        }
-                    }
-                    _ => {
-                        let _ = write_msg(&mut stream, &Msg::Ack { code: 2 });
-                    }
+                if accept_shared.stop.load(Ordering::SeqCst) {
+                    break;
                 }
+                let conn_shared = accept_shared.clone();
+                conns.push(std::thread::spawn(move || {
+                    serve_conn(stream, &conn_shared)
+                }));
             }
-            let _ = done_tx.send(());
+            for c in conns {
+                let _ = c.join();
+            }
         });
         Ok(TcpCheckpointServer {
-            addr,
-            inbox,
+            shared,
             done_rx: Some(done_rx),
             handle: Some(handle),
         })
     }
 
     pub fn addr(&self) -> SocketAddr {
-        self.addr
+        self.shared.addr
+    }
+
+    /// Declare that this destination holds `base`, enabling delta decode
+    /// for frames that reference `(base.round(), base.hash())`.
+    pub fn register_base(&self, base: DeltaBase) {
+        self.shared.bases.lock().unwrap().insert(base.round(), base);
     }
 
     /// Pop a received checkpoint.
     pub fn take(&self, device: u64) -> Option<Checkpoint> {
-        self.inbox.lock().unwrap().remove(&device)
+        self.shared.inbox.lock().unwrap().remove(&device)
     }
 
-    /// Wait for the serving thread to finish all expected transfers.
+    /// Wait until `expected` transfers have succeeded and the server wound
+    /// down.
     pub fn join(mut self) -> Result<()> {
         if let Some(rx) = self.done_rx.take() {
             let _ = rx.recv();
@@ -157,31 +510,141 @@ impl TcpCheckpointServer {
     }
 }
 
-/// Ship a checkpoint to a destination edge's listener over TCP; returns
-/// (measured seconds, wire bytes).
-pub fn send_checkpoint_tcp(dest: SocketAddr, ck: &Checkpoint) -> Result<(f64, usize)> {
-    let blob = encode(ck);
-    let bytes = blob.len();
-    let t0 = Instant::now();
-    let mut stream = TcpStream::connect(dest)?;
-    stream.set_nodelay(true)?;
+/// Knobs for [`send_checkpoint_tcp_opts`].
+#[derive(Clone, Copy, Debug)]
+pub struct TcpOpts {
+    /// How long to wait for the destination to accept the connection.
+    pub connect_timeout: Duration,
+    /// Per-read/-write socket timeout while streaming.
+    pub io_timeout: Duration,
+    /// Streaming chunk size.
+    pub chunk_bytes: usize,
+    /// zstd envelope level; `None` ships raw frames.
+    pub zstd_level: Option<i32>,
+}
+
+impl Default for TcpOpts {
+    fn default() -> Self {
+        TcpOpts {
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Duration::from_secs(10),
+            chunk_bytes: DEFAULT_CHUNK_BYTES,
+            zstd_level: None,
+        }
+    }
+}
+
+/// Convert socket-timeout I/O errors into a descriptive [`Error::Proto`] —
+/// Linux surfaces `SO_RCVTIMEO` expiry as `WouldBlock`.
+fn map_timeout(e: Error, what: &str) -> Error {
+    match e {
+        Error::Io(ref io)
+            if matches!(
+                io.kind(),
+                std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+            ) =>
+        {
+            Error::Proto(format!("checkpoint transfer timed out: {what}"))
+        }
+        e => e,
+    }
+}
+
+/// Stream one encoded blob as `CheckpointBegin` + chunks, then read the
+/// destination's single completion ack.
+fn stream_blob(
+    stream: &mut TcpStream,
+    device: u64,
+    blob: &[u8],
+    chunk_bytes: usize,
+) -> Result<u32> {
     write_msg(
-        &mut stream,
-        &Msg::CheckpointTransfer {
-            device: ck.device_id,
-            blob,
+        stream,
+        &Msg::CheckpointBegin {
+            device,
+            total_len: blob.len() as u64,
         },
     )?;
-    match read_msg(&mut stream)? {
-        Msg::Ack { code: 0 } => Ok((t0.elapsed().as_secs_f64(), bytes)),
-        Msg::Ack { code } => Err(Error::Proto(format!("destination rejected: code {code}"))),
+    for chunk in blob.chunks(chunk_bytes.max(1)) {
+        write_msg(
+            stream,
+            &Msg::CheckpointChunk {
+                device,
+                data: chunk.to_vec(),
+            },
+        )?;
+    }
+    match read_msg(stream)? {
+        Msg::Ack { code } => Ok(code),
         other => Err(Error::Proto(format!("unexpected reply {other:?}"))),
     }
+}
+
+/// Ship a checkpoint over TCP: explicit connect/IO timeouts, chunked
+/// streaming, optional delta encoding against `base`, and automatic
+/// fallback to a full frame when the destination answers Ack 5.
+pub fn send_checkpoint_tcp_opts(
+    dest: SocketAddr,
+    ck: &Checkpoint,
+    base: Option<&DeltaBase>,
+    opts: &TcpOpts,
+) -> Result<TransferStats> {
+    let enc = encode_for_transfer(ck, base, opts.zstd_level)?;
+    let mut stats = TransferStats {
+        wire_bytes: enc.blob.len(),
+        full_bytes: ck.wire_bytes(),
+        used_delta: enc.used_delta,
+        encode_seconds: enc.encode_seconds,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let mut stream = TcpStream::connect_timeout(&dest, opts.connect_timeout).map_err(|e| {
+        if matches!(
+            e.kind(),
+            std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+        ) {
+            Error::Proto(format!(
+                "checkpoint transfer timed out: connecting to {dest}"
+            ))
+        } else {
+            Error::Io(e)
+        }
+    })?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(opts.io_timeout))?;
+    stream.set_write_timeout(Some(opts.io_timeout))?;
+
+    let mut code = stream_blob(&mut stream, ck.device_id, &enc.blob, opts.chunk_bytes)
+        .map_err(|e| map_timeout(e, "streaming checkpoint"))?;
+    if code == 5 && enc.used_delta {
+        // destination cannot prove it holds the base: resend full,
+        // charging the wire for both attempts
+        let retry = encode_for_transfer(ck, None, opts.zstd_level)?;
+        stats.wire_bytes += retry.blob.len();
+        stats.used_delta = false;
+        stats.encode_seconds += retry.encode_seconds;
+        code = stream_blob(&mut stream, ck.device_id, &retry.blob, opts.chunk_bytes)
+            .map_err(|e| map_timeout(e, "resending full checkpoint"))?;
+    }
+    stats.host_seconds = t0.elapsed().as_secs_f64();
+    match code {
+        0 => Ok(stats),
+        c => Err(Error::Proto(format!("destination rejected: code {c}"))),
+    }
+}
+
+/// Ship a checkpoint to a destination edge's listener over TCP; returns
+/// (measured seconds, wire bytes).  Full-frame, default timeouts — the
+/// stable surface used by `experiments::overhead`.
+pub fn send_checkpoint_tcp(dest: SocketAddr, ck: &Checkpoint) -> Result<(f64, usize)> {
+    let stats = send_checkpoint_tcp_opts(dest, ck, None, &TcpOpts::default())?;
+    Ok((stats.host_seconds, stats.wire_bytes))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::migration::codec::encode;
 
     fn ck(device: u64, n: usize) -> Checkpoint {
         Checkpoint {
@@ -202,8 +665,10 @@ mod tests {
     fn inmem_roundtrip() {
         let t = InMemTransport::new();
         let c = ck(7, 100);
-        let secs = t.send(1, &c).unwrap();
-        assert!(secs >= 0.0);
+        let stats = t.send(1, &c).unwrap();
+        assert!(stats.host_seconds >= 0.0);
+        assert!(!stats.used_delta, "no base registered");
+        assert_eq!(stats.full_bytes, c.wire_bytes());
         assert_eq!(t.receive(1, 7).unwrap().unwrap(), c);
         // second receive is empty
         assert!(t.receive(1, 7).unwrap().is_none());
@@ -230,6 +695,85 @@ mod tests {
     }
 
     #[test]
+    fn inmem_delta_path_shrinks_wire_bytes() {
+        let t = InMemTransport::new();
+        let c = ck(3, 5000);
+        // round-boundary base: server params equal the broadcast
+        let base = DeltaBase::from_broadcast(c.round, c.server_params.clone());
+        t.register_base(1, base);
+        let stats = t.send(1, &c).unwrap();
+        assert!(stats.used_delta);
+        assert!(
+            stats.wire_bytes * 2 < stats.full_bytes,
+            "delta+zstd should be well under half: {} of {}",
+            stats.wire_bytes,
+            stats.full_bytes
+        );
+        let got = t.receive(1, 3).unwrap().unwrap();
+        assert_eq!(got, c);
+        for (a, b) in c.server_momentum.iter().zip(&got.server_momentum) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn inmem_missing_recv_base_falls_back_to_full() {
+        let t = InMemTransport::new();
+        let c = ck(4, 1000);
+        let base = DeltaBase::from_broadcast(c.round, c.server_params.clone());
+        t.register_base(1, base);
+        t.drop_recv_base(1); // destination "restarted": lost its base
+        let stats = t.send(1, &c).unwrap();
+        assert!(!stats.used_delta, "fallback must report the full path");
+        // both attempts crossed the wire
+        let full_alone = InMemTransport::new().send(2, &c).unwrap().wire_bytes;
+        assert!(
+            stats.wire_bytes > full_alone,
+            "fallback should charge delta + full, got {} vs full-only {}",
+            stats.wire_bytes,
+            full_alone
+        );
+        assert_eq!(t.receive(1, 4).unwrap().unwrap(), c);
+    }
+
+    #[test]
+    fn assembler_streams_and_validates() {
+        let c = ck(9, 500);
+        let blob = encode(&c);
+        let mut asm = StreamAssembler::new(blob.len()).unwrap();
+        for chunk in blob.chunks(97) {
+            asm.push(chunk).unwrap();
+            assert!(asm.received() <= blob.len());
+        }
+        assert!(asm.is_complete());
+        let frame = asm.finish().unwrap();
+        assert_eq!(decode(&frame).unwrap(), c);
+
+        // bad magic rejected at the fourth byte, long before completion
+        let mut asm = StreamAssembler::new(blob.len()).unwrap();
+        assert!(asm.push(b"NOPE").is_err());
+
+        // overrun rejected immediately
+        let mut asm = StreamAssembler::new(16).unwrap();
+        assert!(asm.push(&[0u8; 17]).is_err());
+
+        // corrupt payload caught by the streamed CRC at finish()
+        let mut bad = blob.clone();
+        bad[blob.len() / 2] ^= 0x40;
+        let mut asm = StreamAssembler::new(bad.len()).unwrap();
+        for chunk in bad.chunks(64) {
+            asm.push(chunk).unwrap();
+        }
+        assert!(asm.finish().is_err());
+
+        // truncation caught
+        let mut asm = StreamAssembler::new(blob.len()).unwrap();
+        asm.push(&blob[..blob.len() - 1]).unwrap();
+        assert!(!asm.is_complete());
+        assert!(asm.finish().is_err());
+    }
+
+    #[test]
     fn tcp_roundtrip_single() {
         let server = TcpCheckpointServer::start(1).unwrap();
         let c = ck(3, 5000);
@@ -237,8 +781,6 @@ mod tests {
         assert!(secs > 0.0);
         assert!(bytes > 5000 * 8);
         server.join().unwrap();
-        // after join, the checkpoint is in the inbox — but `join` consumed
-        // self, so check via a fresh pattern below instead.
     }
 
     #[test]
@@ -246,16 +788,10 @@ mod tests {
         let server = TcpCheckpointServer::start(1).unwrap();
         let c = ck(11, 256);
         send_checkpoint_tcp(server.addr(), &c).unwrap();
-        // wait for the server thread to park it
-        for _ in 0..100 {
-            if let Some(got) = server.take(11) {
-                assert_eq!(got, c);
-                server.join().unwrap();
-                return;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(5));
-        }
-        panic!("checkpoint never arrived");
+        // the completion ack is written after the checkpoint is parked,
+        // so it is already visible here
+        assert_eq!(server.take(11).unwrap(), c);
+        server.join().unwrap();
     }
 
     #[test]
@@ -265,5 +801,139 @@ mod tests {
             send_checkpoint_tcp(server.addr(), &ck(d, 128)).unwrap();
         }
         server.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_legacy_one_shot_frame_still_accepted() {
+        let server = TcpCheckpointServer::start(1).unwrap();
+        let c = ck(8, 200);
+        let mut s = TcpStream::connect(server.addr()).unwrap();
+        write_msg(
+            &mut s,
+            &Msg::CheckpointTransfer {
+                device: 8,
+                blob: encode(&c),
+            },
+        )
+        .unwrap();
+        match read_msg(&mut s).unwrap() {
+            Msg::Ack { code } => assert_eq!(code, 0),
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(server.take(8).unwrap(), c);
+        // close our end so the connection thread can wind down
+        drop(s);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_delta_path_with_registered_base() {
+        let server = TcpCheckpointServer::start(1).unwrap();
+        let c = ck(5, 4000);
+        let base = DeltaBase::from_broadcast(c.round, c.server_params.clone());
+        server.register_base(base.clone());
+        let opts = TcpOpts {
+            zstd_level: Some(ZSTD_LEVEL),
+            ..Default::default()
+        };
+        let stats = send_checkpoint_tcp_opts(server.addr(), &c, Some(&base), &opts).unwrap();
+        assert!(stats.used_delta);
+        assert!(
+            stats.wire_bytes * 2 < stats.full_bytes,
+            "delta+zstd too big: {} of {}",
+            stats.wire_bytes,
+            stats.full_bytes
+        );
+        assert_eq!(server.take(5).unwrap(), c);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_falls_back_to_full_when_destination_lacks_base() {
+        let server = TcpCheckpointServer::start(1).unwrap();
+        let c = ck(6, 1000);
+        // sender believes in a base the server was never told about
+        let base = DeltaBase::from_broadcast(c.round, c.server_params.clone());
+        let opts = TcpOpts {
+            zstd_level: Some(ZSTD_LEVEL),
+            ..Default::default()
+        };
+        let stats = send_checkpoint_tcp_opts(server.addr(), &c, Some(&base), &opts).unwrap();
+        assert!(!stats.used_delta, "must have fallen back to full");
+        assert_eq!(server.take(6).unwrap(), c);
+        server.join().unwrap();
+    }
+
+    /// Regression for the serial-accept server: while one migration is
+    /// parked mid-stream, a second one must connect, stream, and complete
+    /// on its own thread.  Gated by channels, not timing.
+    #[test]
+    fn concurrent_migrations_do_not_queue_behind_a_stalled_stream() {
+        let server = TcpCheckpointServer::start(2).unwrap();
+        let addr = server.addr();
+        let ca = ck(1, 2000);
+        let blob_a = encode(&ca);
+        let (go_tx, go_rx) = mpsc::channel::<()>();
+        let a = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_nodelay(true).unwrap();
+            write_msg(
+                &mut s,
+                &Msg::CheckpointBegin {
+                    device: 1,
+                    total_len: blob_a.len() as u64,
+                },
+            )
+            .unwrap();
+            write_msg(
+                &mut s,
+                &Msg::CheckpointChunk {
+                    device: 1,
+                    data: blob_a[..100].to_vec(),
+                },
+            )
+            .unwrap();
+            // park mid-stream until the other transfer is done
+            go_rx.recv().unwrap();
+            write_msg(
+                &mut s,
+                &Msg::CheckpointChunk {
+                    device: 1,
+                    data: blob_a[100..].to_vec(),
+                },
+            )
+            .unwrap();
+            match read_msg(&mut s).unwrap() {
+                Msg::Ack { code } => assert_eq!(code, 0),
+                other => panic!("unexpected {other:?}"),
+            }
+        });
+        // While A is parked mid-stream, B's whole transfer completes.
+        let cb = ck(2, 500);
+        send_checkpoint_tcp(addr, &cb).unwrap();
+        assert_eq!(server.take(2).unwrap(), cb);
+        assert!(server.take(1).is_none(), "A should still be in flight");
+        go_tx.send(()).unwrap();
+        a.join().unwrap();
+        assert_eq!(server.take(1).unwrap(), ca);
+        server.join().unwrap();
+    }
+
+    /// A destination that accepts the connection but never reads/acks must
+    /// trip the IO timeout with a descriptive protocol error, not hang.
+    #[test]
+    fn tcp_dead_destination_times_out_with_proto_error() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let opts = TcpOpts {
+            io_timeout: Duration::from_millis(200),
+            ..Default::default()
+        };
+        let err = send_checkpoint_tcp_opts(addr, &ck(1, 64), None, &opts).unwrap_err();
+        match err {
+            Error::Proto(m) => assert!(m.contains("timed out"), "unexpected message: {m}"),
+            other => panic!("expected Proto timeout, got {other:?}"),
+        }
+        drop(listener);
     }
 }

@@ -15,6 +15,17 @@ pub struct MoveEvent {
     pub to_edge: usize,
 }
 
+impl MoveEvent {
+    /// The round during which this move is *announced* — the device knows
+    /// it is about to cross a coverage boundary one round ahead (paper
+    /// §IV assumes "the moving device knows when to disconnect"), which is
+    /// what lets the coordinator pre-copy the checkpoint while that round
+    /// finishes.  `None` for round-0 moves: nothing ran yet to overlap.
+    pub fn announce_round(&self) -> Option<u64> {
+        self.round.checked_sub(1)
+    }
+}
+
 /// An immutable, round-sorted mobility schedule.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Schedule {
@@ -238,6 +249,15 @@ mod tests {
         assert_eq!(s.events()[0].to_edge, 1);
         assert_eq!(s.events()[1].to_edge, 0);
         assert_eq!(s.events()[8].to_edge, 1);
+    }
+
+    #[test]
+    fn announce_round_precedes_the_move() {
+        let e = MoveEvent { round: 10, device: 0, to_edge: 1 };
+        assert_eq!(e.announce_round(), Some(9));
+        // a round-0 move has no prior round to overlap with
+        let e0 = MoveEvent { round: 0, device: 0, to_edge: 1 };
+        assert_eq!(e0.announce_round(), None);
     }
 
     #[test]

@@ -75,6 +75,30 @@ impl NetModel {
     }
 }
 
+/// How a transfer's simulated cost splits when it overlaps other work.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OverlappedTransfer {
+    /// Full transfer time had it run alone.
+    pub total: f64,
+    /// Portion hidden behind the concurrent work window.
+    pub hidden: f64,
+    /// Portion that extends the critical path (total - hidden).
+    pub charged: f64,
+}
+
+/// Split transfer time `total` against an overlap `window` of concurrent
+/// work (the pre-copy trick): while the device finishes its in-flight
+/// work, the checkpoint is already streaming, so only the excess beyond
+/// the window delays the device.
+pub fn overlap(total: f64, window: f64) -> OverlappedTransfer {
+    let hidden = total.min(window.max(0.0));
+    OverlappedTransfer {
+        total,
+        hidden,
+        charged: total - hidden,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +132,27 @@ mod tests {
     fn device_relay_is_slower_than_direct() {
         let net = NetModel::default();
         assert!(net.migration_time_via_device(1 << 20) > net.migration_time(1 << 20));
+    }
+
+    #[test]
+    fn overlap_splits_hidden_and_charged() {
+        // transfer fits inside the window: fully hidden
+        let o = overlap(0.5, 2.0);
+        assert_eq!(o.hidden, 0.5);
+        assert_eq!(o.charged, 0.0);
+        // transfer exceeds the window: the excess is charged
+        let o = overlap(3.0, 2.0);
+        assert_eq!(o.hidden, 2.0);
+        assert!((o.charged - 1.0).abs() < 1e-12);
+        // no window (round-0 move): everything charged
+        let o = overlap(1.5, 0.0);
+        assert_eq!(o.hidden, 0.0);
+        assert_eq!(o.charged, 1.5);
+        // negative window clamps to zero
+        let o = overlap(1.0, -1.0);
+        assert_eq!(o.charged, 1.0);
+        // identity: hidden + charged == total
+        assert_eq!(o.hidden + o.charged, o.total);
     }
 
     #[test]

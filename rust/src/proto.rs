@@ -49,8 +49,15 @@ pub enum Msg {
     },
     /// Device -> source edge: about to move to `dest_edge` (Step 6').
     MoveNotice { device: u64, dest_edge: u64 },
-    /// Edge -> edge: the serialized migration checkpoint (Step 8).
+    /// Edge -> edge: the serialized migration checkpoint (Step 8),
+    /// shipped whole in one frame (legacy / small checkpoints).
     CheckpointTransfer { device: u64, blob: Vec<u8> },
+    /// Edge -> edge: start of a chunked checkpoint stream — `total_len`
+    /// encoded bytes for `device` follow as `CheckpointChunk` frames, so
+    /// the receiver can validate and CRC the blob while it arrives.
+    CheckpointBegin { device: u64, total_len: u64 },
+    /// Edge -> edge: one chunk of an in-flight checkpoint stream.
+    CheckpointChunk { device: u64, data: Vec<u8> },
     /// Device -> edge after reconnect: resume training (Step 9).
     Resume { device: u64 },
     /// Generic acknowledgement.
@@ -72,6 +79,8 @@ impl Msg {
             Msg::Resume { .. } => 8,
             Msg::Ack { .. } => 9,
             Msg::Bye => 10,
+            Msg::CheckpointBegin { .. } => 11,
+            Msg::CheckpointChunk { .. } => 12,
         }
     }
 
@@ -121,6 +130,15 @@ impl Msg {
             Msg::Resume { device } => put_u64(&mut b, *device),
             Msg::Ack { code } => put_u32(&mut b, *code),
             Msg::Bye => {}
+            Msg::CheckpointBegin { device, total_len } => {
+                put_u64(&mut b, *device);
+                put_u64(&mut b, *total_len);
+            }
+            Msg::CheckpointChunk { device, data } => {
+                put_u64(&mut b, *device);
+                put_u64(&mut b, data.len() as u64);
+                b.extend_from_slice(data);
+            }
         }
         b
     }
@@ -174,6 +192,21 @@ impl Msg {
                 code: r.u32().map_err(perr)?,
             },
             10 => Msg::Bye,
+            11 => Msg::CheckpointBegin {
+                device: r.u64().map_err(perr)?,
+                total_len: r.u64().map_err(perr)?,
+            },
+            12 => {
+                let device = r.u64().map_err(perr)?;
+                let n = r.u64().map_err(perr)? as usize;
+                if n > r.remaining() {
+                    return Err(Error::Proto("checkpoint chunk overruns frame".into()));
+                }
+                let mut data = vec![0u8; n];
+                let start = r.pos();
+                data.copy_from_slice(&payload[start..start + n]);
+                Msg::CheckpointChunk { device, data }
+            }
             t => return Err(Error::Proto(format!("unknown tag {t}"))),
         };
         Ok(msg)
@@ -264,6 +297,18 @@ mod tests {
         roundtrip(Msg::Resume { device: 9 });
         roundtrip(Msg::Ack { code: 0 });
         roundtrip(Msg::Bye);
+        roundtrip(Msg::CheckpointBegin {
+            device: 4,
+            total_len: 123_456,
+        });
+        roundtrip(Msg::CheckpointChunk {
+            device: 4,
+            data: (0..=255).cycle().take(4096).collect(),
+        });
+        roundtrip(Msg::CheckpointChunk {
+            device: 4,
+            data: Vec::new(),
+        });
     }
 
     #[test]

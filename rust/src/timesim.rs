@@ -114,6 +114,20 @@ impl PairTimeModel {
         bt.total() * batches as f64 + sync
     }
 
+    /// The pre-copy overlap window for a migration announced one round
+    /// ahead (paper §IV: "the moving device knows when to disconnect").
+    ///
+    /// After the edge's last server-step of the round, the server-side
+    /// state the checkpoint captures is final — the device's remaining
+    /// backward pass and the global model sync no longer touch it.  The
+    /// checkpoint transfer can therefore stream concurrently with that
+    /// tail of the round, and only the excess beyond this window delays
+    /// training (see `netsim::overlap`).
+    pub fn precopy_window(&self, meta: &ModelMeta, sp: usize, batch: usize) -> f64 {
+        let bt = self.batch_time(meta, sp, batch);
+        bt.device_bwd + self.net.model_sync_time(meta.total_params() * 4)
+    }
+
     /// Classic (non-split) FL: the device trains the *whole* VGG-5
     /// locally — the paper's §I motivation for offloading in the first
     /// place.  No smashed-data exchange; only the model sync remains.
@@ -189,6 +203,21 @@ mod tests {
             classic > split,
             "classic {classic} should exceed split {split} on a Pi3"
         );
+    }
+
+    #[test]
+    fn precopy_window_is_a_useful_fraction_of_migration_time() {
+        // The window (device backward + model sync) must be positive and
+        // smaller than a whole round — it hides part of a transfer, not
+        // entire rounds of work.
+        let Some(m) = meta() else { return };
+        let p = pair(profiles::PI3);
+        let w = p.precopy_window(&m, 2, 100);
+        let round = p.round_time(&m, 2, 100, 12_500);
+        assert!(w > 0.0, "window {w}");
+        assert!(w < round, "window {w} >= round {round}");
+        let bt = p.batch_time(&m, 2, 100);
+        assert!(w >= bt.device_bwd);
     }
 
     #[test]

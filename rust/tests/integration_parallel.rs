@@ -116,6 +116,23 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, label: &str) {
                 "{label}: migration_sim d{d} r{r}"
             );
             assert_eq!(
+                da.migration_hidden_sim_seconds.to_bits(),
+                db.migration_hidden_sim_seconds.to_bits(),
+                "{label}: migration_hidden d{d} r{r}"
+            );
+            assert_eq!(
+                da.migration_wire_bytes, db.migration_wire_bytes,
+                "{label}: migration_wire_bytes d{d} r{r}"
+            );
+            assert_eq!(
+                da.migration_full_bytes, db.migration_full_bytes,
+                "{label}: migration_full_bytes d{d} r{r}"
+            );
+            assert_eq!(
+                da.migration_used_delta, db.migration_used_delta,
+                "{label}: migration_used_delta d{d} r{r}"
+            );
+            assert_eq!(
                 da.restart_penalty_sim_seconds.to_bits(),
                 db.restart_penalty_sim_seconds.to_bits(),
                 "{label}: restart_penalty d{d} r{r}"
@@ -136,14 +153,26 @@ fn assert_reports_identical(a: &RunReport, b: &RunReport, label: &str) {
     }
 }
 
-fn run_sim(workers: usize, strategy: Strategy, fault: f64) -> RunReport {
+fn run_sim_cfg(
+    workers: usize,
+    strategy: Strategy,
+    fault: f64,
+    delta: bool,
+    overlap: bool,
+) -> RunReport {
     let mut cfg = RunConfig::paper_testbed();
     cfg.rounds = 12;
     cfg.strategy = strategy;
     cfg.fault_loss_prob = fault;
     cfg.schedule = busy_schedule();
     cfg.workers = workers;
+    cfg.delta_migration = delta;
+    cfg.overlap_migration = overlap;
     Runner::new(cfg, sim_meta()).unwrap().run(None).unwrap()
+}
+
+fn run_sim(workers: usize, strategy: Strategy, fault: f64) -> RunReport {
+    run_sim_cfg(workers, strategy, fault, true, true)
 }
 
 #[test]
@@ -156,6 +185,37 @@ fn simonly_fedfly_bit_identical_across_worker_counts() {
         let r = run_sim(w, Strategy::FedFly, 0.0);
         assert_reports_identical(&base, &r, &format!("fedfly workers={w}"));
     }
+}
+
+#[test]
+fn simonly_full_frames_no_overlap_bit_identical_across_worker_counts() {
+    // Legacy wire path: full frames, no pre-copy.  Still deterministic
+    // across worker counts, and the delta flag really controls the codec.
+    let base = run_sim_cfg(1, Strategy::FedFly, 0.0, false, false);
+    let delta_used: usize = base.summaries().iter().map(|s| s.delta_migrations).sum();
+    assert_eq!(delta_used, 0, "delta disabled -> no delta frames");
+    for w in [2, 4] {
+        let r = run_sim_cfg(w, Strategy::FedFly, 0.0, false, false);
+        assert_reports_identical(&base, &r, &format!("full-frame workers={w}"));
+    }
+    let with_delta = run_sim(1, Strategy::FedFly, 0.0);
+    let delta_used: usize = with_delta
+        .summaries()
+        .iter()
+        .map(|s| s.delta_migrations)
+        .sum();
+    assert_eq!(delta_used, 4, "delta enabled -> all 4 moves use deltas");
+    let full_wire: u64 = base
+        .summaries()
+        .iter()
+        .map(|s| s.total_migration_wire_bytes)
+        .sum();
+    let delta_wire: u64 = with_delta
+        .summaries()
+        .iter()
+        .map(|s| s.total_migration_wire_bytes)
+        .sum();
+    assert!(delta_wire < full_wire, "delta wire {delta_wire} >= full {full_wire}");
 }
 
 #[test]
