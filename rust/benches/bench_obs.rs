@@ -1,0 +1,57 @@
+//! Observability hot-path cost: what a `span!` and a counter bump cost
+//! with tracing disabled (the always-on tax every run pays) vs enabled.
+//! The disabled span must stay in single-digit nanoseconds — one relaxed
+//! atomic load and a branch — or the "tracing off = free" contract in
+//! `obs` is broken.
+
+mod harness;
+
+use fedfly::obs::{self, metric::wellknown as om};
+
+const OPS: usize = 1000;
+
+fn main() {
+    harness::header("observability hot path (1000 ops per iter)");
+
+    obs::disable();
+    harness::bench("span!/disabled", 50, 200, || {
+        for i in 0..OPS {
+            let _g = fedfly::span!("bench", i = i);
+        }
+    });
+
+    obs::set_metrics_enabled(false);
+    harness::bench("counter/disabled", 50, 200, || {
+        for _ in 0..OPS {
+            om::ROUNDS_TOTAL.inc();
+        }
+    });
+    obs::set_metrics_enabled(true);
+
+    harness::bench("counter/enabled", 50, 200, || {
+        for _ in 0..OPS {
+            om::ROUNDS_TOTAL.inc();
+        }
+    });
+
+    harness::bench("histogram/enabled", 50, 200, || {
+        for i in 0..OPS {
+            om::ENCODE_LATENCY_US.observe_us(i as u64);
+        }
+    });
+
+    obs::enable();
+    harness::bench("span!/enabled", 20, 100, || {
+        for i in 0..OPS {
+            let _g = fedfly::span!("bench", i = i);
+        }
+    });
+    // Drop the buffered events so the bench exits without a huge sink.
+    let trace = obs::drain();
+    obs::disable();
+    println!(
+        "captured {} events ({} dropped past the sink cap)",
+        trace.events.len(),
+        trace.dropped
+    );
+}

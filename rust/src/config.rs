@@ -68,6 +68,11 @@ pub struct RunConfig {
     /// (one round ahead) and charge only the portion that exceeds the
     /// round's remaining work window (see `timesim::precopy_window`).
     pub overlap_migration: bool,
+    /// Record spans into the `obs` tracing sink during the run (CLI
+    /// `--trace-out`).  Off by default: disabled tracing costs one
+    /// relaxed atomic load per span site and records nothing, keeping
+    /// determinism surfaces bit-exact.
+    pub trace: bool,
 }
 
 impl RunConfig {
@@ -96,6 +101,7 @@ impl RunConfig {
             fault_loss_prob: 0.0,
             delta_migration: true,
             overlap_migration: true,
+            trace: false,
         }
     }
 
@@ -215,6 +221,7 @@ impl RunConfig {
             ("workers", json::num(self.workers as f64)),
             ("delta_migration", Value::Bool(self.delta_migration)),
             ("overlap_migration", Value::Bool(self.overlap_migration)),
+            ("trace", Value::Bool(self.trace)),
             (
                 "moves",
                 json::arr(

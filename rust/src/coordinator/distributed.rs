@@ -44,6 +44,7 @@ use crate::migration::codec::{
 use crate::migration::transport::DEFAULT_CHUNK_BYTES;
 use crate::migration::{StreamAssembler, Strategy};
 use crate::model::ModelMeta;
+use crate::obs::metric::wellknown as om;
 use crate::proto::{read_msg, write_msg, Msg};
 use crate::runtime::{Engine, HostTensor};
 use crate::split::{DeviceState, ServerState};
@@ -106,6 +107,7 @@ pub fn run_central(
 
     let mut global = GlobalModel::new(init_params);
     for round in 0..rounds {
+        let _span = crate::span!("central_round", round = round);
         for s in &mut edges {
             write_msg(
                 s,
@@ -224,11 +226,7 @@ pub fn start_edge(
             .name(format!("edge-{edge_id}"))
             .spawn(move || {
                 if let Err(e) = edge_worker(work_rx, central, peers, manifest, meta, sp, batch) {
-                    crate::util::logging::log(
-                        crate::util::logging::Level::Error,
-                        "edge",
-                        format_args!("edge worker failed: {e}"),
-                    );
+                    crate::error!("edge worker failed: {e}");
                 }
             })
             .map_err(Error::Io)?
@@ -345,6 +343,7 @@ fn edge_worker(
                             labels,
                             reply,
                         });
+                        om::PARKED_BATCHES.add(1);
                     } else {
                         let out = edge_server_step(
                             &engine, &meta, sp, batch, &mut states, &mut inbox, &global,
@@ -378,6 +377,7 @@ fn edge_worker(
                     // the stream at the destination, ack the device, and
                     // stream the bytes in the background so the transfer
                     // overlaps the device's reconnect + first batches.
+                    let _span = crate::span!("migrate_out", device = device, dest = dest_edge);
                     let code = match states.remove(&device) {
                         Some(srv) => {
                             let dest = *peers.get(dest_edge as usize).ok_or_else(|| {
@@ -407,6 +407,7 @@ fn edge_worker(
                         }
                         None => 4, // nothing to migrate (device never trained here)
                     };
+                    om::ack(code);
                     let _ = reply.send(Msg::Ack { code });
                 }
                 Msg::CheckpointBegin { device, total_len } => {
@@ -417,10 +418,18 @@ fn edge_worker(
                         Ok(a) => {
                             incoming.insert(device, a);
                             expecting.insert(device);
+                            crate::obs::instant(
+                                "checkpoint_stream_begin",
+                                &[
+                                    ("device", crate::obs::ArgVal::from(device)),
+                                    ("total_len", crate::obs::ArgVal::from(total_len)),
+                                ],
+                            );
                             0
                         }
                         Err(_) => 1,
                     };
+                    om::ack(code);
                     let _ = reply.send(Msg::Ack { code });
                 }
                 Msg::CheckpointChunk { device, data } => {
@@ -457,13 +466,22 @@ fn edge_worker(
                     // same semantics as a lost transfer).
                     if resolved && code != 5 {
                         expecting.remove(&device);
+                        crate::obs::instant(
+                            "checkpoint_stream_resolved",
+                            &[
+                                ("device", crate::obs::ArgVal::from(device)),
+                                ("code", crate::obs::ArgVal::from(code)),
+                            ],
+                        );
                     }
+                    om::ack(code);
                     let _ = reply.send(Msg::Ack { code });
                 }
                 Msg::CheckpointTransfer { device, blob } => {
                     // Legacy one-shot frame (small checkpoints / old
                     // senders); base-aware so delta frames decode too.
                     let code = ingest_frame(&bases, &mut inbox, device, blob);
+                    om::ack(code);
                     let _ = reply.send(Msg::Ack { code });
                 }
                 other => {
@@ -483,6 +501,7 @@ fn edge_worker(
                 || !expecting.contains(&device);
             if ready {
                 let p = parked.remove(i);
+                om::PARKED_BATCHES.add(-1);
                 let out = edge_server_step(
                     &engine, &meta, sp, batch, &mut states, &mut inbox, &global, p.device,
                     &p.data, &p.labels,
@@ -546,6 +565,12 @@ fn begin_checkpoint_stream(
 ) -> Result<()> {
     let enc = encode_for_transfer(&ck, base.as_ref(), Some(ZSTD_LEVEL))?;
     let device = ck.device_id;
+    om::MIGRATIONS_TOTAL.inc();
+    om::MIGRATION_WIRE_BYTES_TOTAL.add(enc.blob.len() as u64);
+    om::MIGRATION_FULL_BYTES_TOTAL.add(ck.wire_bytes() as u64);
+    if enc.used_delta {
+        om::MIGRATION_DELTA_TOTAL.inc();
+    }
     let mut peer = TcpStream::connect(dest)?;
     peer.set_nodelay(true)?;
     write_msg(
@@ -567,12 +592,9 @@ fn begin_checkpoint_stream(
     // Ack-5 fall-back-to-full retry.
     let fallback = if enc.used_delta { Some(ck) } else { None };
     std::thread::spawn(move || {
+        let _span = crate::span!("checkpoint_stream", device = device);
         if let Err(e) = stream_checkpoint_chunks(&mut peer, device, &enc.blob, fallback) {
-            crate::util::logging::log(
-                crate::util::logging::Level::Error,
-                "edge",
-                format_args!("checkpoint stream to {dest} failed: {e}"),
-            );
+            crate::error!("checkpoint stream to {dest} failed: {e}");
         }
         let _ = write_msg(&mut peer, &Msg::Bye);
     });
@@ -594,7 +616,9 @@ fn stream_checkpoint_chunks(
             let ck = fallback.ok_or_else(|| {
                 Error::Proto("destination demanded a delta base for a full frame".into())
             })?;
+            om::MIGRATION_DELTA_FALLBACK_TOTAL.inc();
             let retry = encode_for_transfer(&ck, None, Some(ZSTD_LEVEL))?;
+            om::MIGRATION_WIRE_BYTES_TOTAL.add(retry.blob.len() as u64);
             write_msg(
                 peer,
                 &Msg::CheckpointBegin {
@@ -732,6 +756,16 @@ fn handle_edge_conn(mut stream: TcpStream, work_tx: mpsc::Sender<Work>) -> Resul
             Msg::Hello { .. } => {
                 write_msg(&mut stream, &Msg::Ack { code: 0 })?;
             }
+            Msg::MetricsRequest => {
+                // Live stats endpoint: answered here in the I/O thread so a
+                // monitor never blocks on (or perturbs) the training worker.
+                write_msg(
+                    &mut stream,
+                    &Msg::MetricsReply {
+                        text: crate::obs::export::prometheus_text(),
+                    },
+                )?;
+            }
             Msg::Resume { .. } => {
                 let (tx, rx) = mpsc::channel();
                 work_tx
@@ -764,6 +798,25 @@ fn handle_edge_conn(mut stream: TcpStream, work_tx: mpsc::Sender<Work>) -> Resul
             }
         }
     }
+}
+
+/// Fetch a live metrics snapshot from an edge server's control socket —
+/// the distributed-mode `GET /metrics`.  Returns the Prometheus text
+/// exposition of the edge process's `obs` metrics.
+pub fn fetch_metrics(addr: SocketAddr) -> Result<String> {
+    let mut s = TcpStream::connect(addr)?;
+    s.set_nodelay(true)?;
+    write_msg(&mut s, &Msg::MetricsRequest)?;
+    let text = match read_msg(&mut s)? {
+        Msg::MetricsReply { text } => text,
+        other => {
+            return Err(Error::Proto(format!(
+                "expected metrics reply, got {other:?}"
+            )))
+        }
+    };
+    let _ = write_msg(&mut s, &Msg::Bye);
+    Ok(text)
 }
 
 // ---------------------------------------------------------------------------
@@ -834,6 +887,7 @@ pub fn run_device(
     let mut migration_seconds = 0.0f64;
 
     for round in 0..cfg.rounds {
+        let _span = crate::span!("device_round", device = cfg.id, round = round);
         // Mobility at the round boundary (paper Step 6').
         if let Some(&(_, dest)) = cfg.moves.iter().find(|(r, _)| *r == round) {
             if dest != edge {

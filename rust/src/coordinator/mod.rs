@@ -34,6 +34,8 @@ use crate::migration::{
 };
 use crate::model::ModelMeta;
 use crate::netsim;
+use crate::obs;
+use crate::obs::metric::wellknown as om;
 use crate::runtime::Engine;
 use crate::split::{accuracy_from_logits, DeviceState, ServerState, SplitEngine};
 use crate::timesim::PairTimeModel;
@@ -76,6 +78,9 @@ impl Runner {
     pub fn run(&self, engine: Option<&Engine>) -> Result<RunReport> {
         let cfg = &self.cfg;
         let meta = &self.meta;
+        if cfg.trace {
+            obs::enable();
+        }
         let real = cfg.exec == ExecMode::Real;
         let n_workers = cfg.workers.max(1);
         if real && engine.is_none() && n_workers == 1 {
@@ -164,6 +169,8 @@ impl Runner {
         };
 
         for round in 0..cfg.rounds {
+            let _round_span = crate::span!("round", round = round);
+            om::ROUNDS_TOTAL.inc();
             // ---- mobility events at the round boundary (paper Step 6-9)
             let moves: Vec<_> = cfg.schedule.at_round(round).copied().collect();
             let mut moved = vec![false; devices.len()];
@@ -195,6 +202,12 @@ impl Runner {
                 };
                 match strategy {
                     Strategy::FedFly => {
+                        let _mig_span = crate::span!(
+                            "migrate",
+                            device = e.device,
+                            round = round,
+                            to_edge = e.to_edge
+                        );
                         // Checkpoint at the source edge, ship via the real
                         // codec/transport, restore at the destination.
                         let ck = Checkpoint {
@@ -274,6 +287,13 @@ impl Runner {
                         mig_hidden[e.device] = o.hidden;
                     }
                     Strategy::Restart => {
+                        obs::instant(
+                            "restart_migration",
+                            &[
+                                ("device", obs::ArgVal::from(e.device)),
+                                ("to_edge", obs::ArgVal::from(e.to_edge)),
+                            ],
+                        );
                         // Destination edge has no state: server-side half
                         // restarts from the current global model, optimizer
                         // state is lost, and every productive round since
@@ -346,6 +366,8 @@ impl Runner {
                 }
             } else {
                 for (d, ctx) in devices.iter_mut().enumerate() {
+                    // Serial path: one logical worker (0) runs every device.
+                    let _dev_span = crate::span!("worker", worker = 0usize, device = d);
                     let pair = PairTimeModel {
                         device: cfg.device_profiles[d],
                         edge: cfg.edge_profiles[ctx.edge],
@@ -402,7 +424,17 @@ impl Runner {
                     });
                 }
             }
-            let train_wall = t_train.elapsed().as_secs_f64();
+            // Record the span from the exact same Instant/Duration that
+            // feeds RunPerf, so trace totals reconcile with perf counters.
+            let train_elapsed = t_train.elapsed();
+            obs::complete_at(
+                "train",
+                "fedfly::coordinator",
+                t_train,
+                train_elapsed,
+                &[("round", obs::ArgVal::from(round))],
+            );
+            let train_wall = train_elapsed.as_secs_f64();
             perf.train_wall_seconds += train_wall;
             if pool.is_none() {
                 // Serial path: one logical worker did everything.
@@ -411,6 +443,7 @@ impl Runner {
             }
 
             // ---- aggregation (paper Steps 4/5)
+            let mut agg_host = 0.0f64;
             if real {
                 let t0 = std::time::Instant::now();
                 {
@@ -431,13 +464,23 @@ impl Runner {
                     ctx.dev.refresh_from_global(&global.params);
                     ctx.srv.refresh_from_global(&global.params);
                 }
-                perf.aggregate_seconds += t0.elapsed().as_secs_f64();
+                let agg_elapsed = t0.elapsed();
+                obs::complete_at(
+                    "aggregate",
+                    "fedfly::coordinator",
+                    t0,
+                    agg_elapsed,
+                    &[("round", obs::ArgVal::from(round))],
+                );
+                agg_host = agg_elapsed.as_secs_f64();
+                perf.aggregate_seconds += agg_host;
             }
             // SimOnly: parameters never change (no compute), so FedAvg is
             // a fixed point — skipping it is exact and saves ~2 ms x
             // rounds x runs on figure generation (EXPERIMENTS.md §Perf L3).
 
             // ---- evaluation (paper Step 6 -> next round; eval on demand)
+            let mut eval_host = 0.0f64;
             let accuracy = match cfg.eval_every {
                 Some(every)
                     if real
@@ -453,7 +496,16 @@ impl Runner {
                             .expect("serial Real mode always has a split engine");
                         evaluate(se, &global.params, &test, cfg.batch)?
                     };
-                    perf.eval_seconds += t0.elapsed().as_secs_f64();
+                    let eval_elapsed = t0.elapsed();
+                    obs::complete_at(
+                        "eval",
+                        "fedfly::coordinator",
+                        t0,
+                        eval_elapsed,
+                        &[("round", obs::ArgVal::from(round))],
+                    );
+                    eval_host = eval_elapsed.as_secs_f64();
+                    perf.eval_seconds += eval_host;
                     Some(a)
                 }
                 _ => None,
@@ -467,9 +519,12 @@ impl Runner {
                     f32::NAN
                 },
                 accuracy,
+                aggregate_host_seconds: agg_host,
+                eval_host_seconds: eval_host,
                 devices: dev_rounds,
             });
         }
+        obs::flush_thread();
         if let Some(pool) = pool.take() {
             perf.workers_perf = pool.finish()?;
         } else if let (Some(e), Some(s0)) = (engine, &engine_stats0) {

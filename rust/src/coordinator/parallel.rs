@@ -34,6 +34,7 @@ use crate::error::{Error, Result};
 use crate::manifest::Manifest;
 use crate::metrics::WorkerPerf;
 use crate::model::ModelMeta;
+use crate::obs::metric::wellknown as om;
 use crate::runtime::Engine;
 use crate::split::{accuracy_from_logits, SplitEngine};
 
@@ -228,7 +229,10 @@ impl WorkerPool {
         // slowest one finished the round.
         let wall = t0.elapsed().as_secs_f64();
         for w in 0..self.n {
-            self.perf[w].barrier_wait_seconds += (wall - busy[w]).max(0.0);
+            let wait = (wall - busy[w]).max(0.0);
+            self.perf[w].barrier_wait_seconds += wait;
+            om::BARRIER_WAIT_US_TOTAL.add_seconds(wait);
+            om::WORKER_BUSY_US_TOTAL.add_seconds(busy[w]);
         }
         let mut out_ctxs = Vec::with_capacity(n_dev);
         let mut results = Vec::with_capacity(n_dev);
@@ -298,7 +302,10 @@ impl WorkerPool {
         }
         let wall = t0.elapsed().as_secs_f64();
         for w in 0..self.n {
-            self.perf[w].barrier_wait_seconds += (wall - busy[w]).max(0.0);
+            let wait = (wall - busy[w]).max(0.0);
+            self.perf[w].barrier_wait_seconds += wait;
+            om::BARRIER_WAIT_US_TOTAL.add_seconds(wait);
+            om::WORKER_BUSY_US_TOTAL.add_seconds(busy[w]);
         }
         let mut correct = 0.0f64;
         for &c in &per_batch {
@@ -392,6 +399,8 @@ fn worker_main(wcfg: WorkerCfg, jobs: Receiver<Job>, replies: Sender<Reply>) {
     while let Ok(job) = jobs.recv() {
         match job {
             Job::Train(task) => {
+                let device = task.device;
+                let _span = crate::span!("worker", worker = wcfg.worker, device = device);
                 let t0 = Instant::now();
                 match run_train(&wcfg, se.as_ref(), *task) {
                     Ok(mut done) => {
@@ -411,6 +420,8 @@ fn worker_main(wcfg: WorkerCfg, jobs: Receiver<Job>, replies: Sender<Reply>) {
                 }
             }
             Job::Eval { params, starts } => {
+                let _span =
+                    crate::span!("worker_eval", worker = wcfg.worker, batches = starts.len());
                 let t0 = Instant::now();
                 let res = match &se {
                     Some(se) => run_eval(&wcfg, se, &params, &starts),

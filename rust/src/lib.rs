@@ -36,6 +36,7 @@ pub mod migration;
 pub mod mobility;
 pub mod model;
 pub mod netsim;
+pub mod obs;
 pub mod offload;
 pub mod proto;
 pub mod runtime;

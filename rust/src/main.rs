@@ -25,6 +25,7 @@ fn usage() -> ! {
            train [--rounds N] [--sp K] [--batch B] [--strategy fedfly|restart]\n\
                  [--move-at FRAC] [--samples N] [--sim] [--seed S] [--workers W]\n\
                  [--full-migration] [--no-overlap]\n\
+                 [--trace-out PATH] [--no-trace]   Chrome trace + JSONL + metrics dump\n\
            fig3a | fig3b | fig3c        paper timing figures (simulated testbed)\n\
            fig4 [--frac F] [--rounds N] paper accuracy figure (real training)\n\
            overhead                     migration overhead table\n\
@@ -53,7 +54,7 @@ impl Args {
                 };
                 flags.insert(name.to_string(), val);
             } else {
-                eprintln!("unexpected argument {a:?}");
+                fedfly::error!("unexpected argument {a:?}");
                 usage();
             }
             i += 1;
@@ -74,11 +75,13 @@ impl Args {
 }
 
 fn main() {
+    // Fix the log epoch/level before any thread can race the lazy init.
+    fedfly::util::logging::init();
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else { usage() };
     let args = Args::parse(&argv[1..]);
     if let Err(e) = dispatch(cmd, &args) {
-        eprintln!("error: {e}");
+        fedfly::error!("{e}");
         std::process::exit(1);
     }
 }
@@ -130,7 +133,9 @@ fn central_cmd(args: &Args) -> fedfly::Result<()> {
     let rounds = args.get("rounds", 10u64);
     let seed = args.get("seed", 7u64);
     let listener = std::net::TcpListener::bind(&listen)?;
-    println!("central: listening on {listen} for {n_edges} edges, {n_devices} devices, {rounds} rounds");
+    fedfly::info!(
+        "central: listening on {listen} for {n_edges} edges, {n_devices} devices, {rounds} rounds"
+    );
     let params = fedfly::coordinator::distributed::run_central(
         listener,
         n_edges,
@@ -156,7 +161,7 @@ fn edge_cmd(args: &Args) -> fedfly::Result<()> {
         .map(|s| s.parse().map_err(|e| fedfly::Error::Config(format!("bad peer {s}: {e}"))))
         .collect::<fedfly::Result<_>>()?;
     let listener = std::net::TcpListener::bind(&listen)?;
-    println!("edge {id}: listening on {listen}, central {central}");
+    fedfly::info!("edge {id}: listening on {listen}, central {central}");
     let handle = fedfly::coordinator::distributed::start_edge(
         listener,
         id,
@@ -167,7 +172,7 @@ fn edge_cmd(args: &Args) -> fedfly::Result<()> {
         args.get("batch", 16usize),
     )?;
     // Serve until killed.
-    println!("edge {id}: serving (ctrl-c to stop)");
+    fedfly::info!("edge {id}: serving (ctrl-c to stop)");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
         let _ = &handle;
@@ -271,6 +276,10 @@ fn train(args: &Args) -> fedfly::Result<()> {
     if args.has("no-overlap") {
         cfg.overlap_migration = false;
     }
+    let trace_out: String = args.get("trace-out", String::new());
+    if !trace_out.is_empty() && !args.has("no-trace") {
+        cfg.trace = true;
+    }
 
     let meta = experiments::load_meta()?;
     // With workers > 1 every pool worker builds its own engine, so the
@@ -323,6 +332,23 @@ fn train(args: &Args) -> fedfly::Result<()> {
             w.tasks,
             w.engine_executions,
             w.engine_exec_seconds
+        );
+    }
+    print!("{}", report.phase_waterfall());
+    if !trace_out.is_empty() && !args.has("no-trace") {
+        let trace = fedfly::obs::drain();
+        let path = std::path::Path::new(&trace_out);
+        fedfly::obs::export::write_chrome_trace(path, &trace)?;
+        fedfly::obs::export::write_jsonl(&path.with_extension("jsonl"), &trace)?;
+        std::fs::write(
+            path.with_extension("metrics.txt"),
+            fedfly::obs::export::prometheus_text(),
+        )?;
+        fedfly::info!(
+            "trace: {} events ({} dropped) -> {} (+ .jsonl, .metrics.txt)",
+            trace.events.len(),
+            trace.dropped,
+            path.display()
         );
     }
     Ok(())

@@ -47,6 +47,12 @@ pub struct RoundRecord {
     pub round: u64,
     pub mean_loss: f32,
     pub accuracy: Option<f64>,
+    /// Measured host seconds in this round's FedAvg reduction (0 in
+    /// simulate-only mode, where no aggregation runs).
+    pub aggregate_host_seconds: f64,
+    /// Measured host seconds in this round's evaluation (0 when no eval
+    /// was scheduled).
+    pub eval_host_seconds: f64,
     pub devices: Vec<DeviceRound>,
 }
 
@@ -183,6 +189,55 @@ impl RunReport {
 
     pub fn summaries(&self) -> Vec<DeviceSummary> {
         (0..self.n_devices()).map(|d| self.device_summary(d)).collect()
+    }
+
+    /// Per-round phase waterfall: where each round's time went, simulated
+    /// and measured.  Simulated columns take the *slowest* device (FedAvg
+    /// is a barrier, so the round lasts as long as its slowest
+    /// participant); host columns sum measured seconds across devices.
+    pub fn phase_waterfall(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            "phase waterfall (sim = slowest device per round, host = summed measured)\n",
+        );
+        out.push_str(&format!(
+            "{:>5} {:>11} {:>11} {:>11} {:>11} {:>11} {:>11} {:>11}\n",
+            "round",
+            "sim_train",
+            "mig_charged",
+            "mig_hidden",
+            "penalty",
+            "host_train",
+            "host_agg",
+            "host_eval"
+        ));
+        let mut tot = [0.0f64; 7];
+        for r in &self.rounds {
+            let slowest = |f: fn(&DeviceRound) -> f64| -> f64 {
+                r.devices.iter().map(f).fold(0.0, f64::max)
+            };
+            let cols = [
+                slowest(|d| d.sim_seconds),
+                slowest(|d| d.migration_sim_seconds),
+                slowest(|d| d.migration_hidden_sim_seconds),
+                slowest(|d| d.restart_penalty_sim_seconds),
+                r.devices.iter().map(|d| d.host_seconds).sum::<f64>(),
+                r.aggregate_host_seconds,
+                r.eval_host_seconds,
+            ];
+            for (t, c) in tot.iter_mut().zip(cols.iter()) {
+                *t += c;
+            }
+            out.push_str(&format!(
+                "{:>5} {:>11.3} {:>11.3} {:>11.3} {:>11.3} {:>11.4} {:>11.4} {:>11.4}\n",
+                r.round, cols[0], cols[1], cols[2], cols[3], cols[4], cols[5], cols[6]
+            ));
+        }
+        out.push_str(&format!(
+            "{:>5} {:>11.3} {:>11.3} {:>11.3} {:>11.3} {:>11.4} {:>11.4} {:>11.4}\n",
+            "TOTAL", tot[0], tot[1], tot[2], tot[3], tot[4], tot[5], tot[6]
+        ));
+        out
     }
 
     /// (round, accuracy) points where evaluation ran.
@@ -343,6 +398,8 @@ impl RunReport {
                     ),
                 ]),
             ),
+            // process-wide observability counters/histograms at dump time
+            ("obs", crate::obs::export::metrics_json()),
         ])
     }
 }
@@ -356,6 +413,8 @@ mod tests {
             round,
             mean_loss: 2.0 - round as f32 * 0.1,
             accuracy: if round % 2 == 0 { Some(0.5 + round as f64 / 100.0) } else { None },
+            aggregate_host_seconds: 0.002,
+            eval_host_seconds: if round % 2 == 0 { 0.003 } else { 0.0 },
             devices: vec![
                 DeviceRound {
                     device: 0,
@@ -461,5 +520,139 @@ mod tests {
         assert_eq!(back.get_usize("rounds").unwrap(), 3);
         let perf = back.get("perf").unwrap();
         assert_eq!(perf.get_usize("workers").unwrap(), 2);
+        assert!(back.get("obs").is_ok(), "metrics dump missing from report");
+    }
+
+    #[test]
+    fn waterfall_has_one_row_per_round_plus_total() {
+        let r = report();
+        let w = r.phase_waterfall();
+        // banner + header + 3 rounds + TOTAL
+        assert_eq!(w.lines().count(), 2 + 3 + 1);
+        assert!(w.contains("TOTAL"));
+        assert!(w.contains("mig_charged"));
+    }
+
+    fn gen_report(r: &mut crate::util::rng::Rng) -> RunReport {
+        let rounds = 1 + r.below(3) as u64;
+        let n_dev = 1 + r.below(3);
+        let mut recs = Vec::new();
+        for round in 0..rounds {
+            let mut devices = Vec::new();
+            for device in 0..n_dev {
+                let migrated = r.below(3) == 0;
+                devices.push(DeviceRound {
+                    device,
+                    round,
+                    edge: r.below(2),
+                    sim_seconds: r.next_f64() * 100.0,
+                    host_seconds: r.next_f64(),
+                    loss: r.next_f32() * 3.0,
+                    migrated,
+                    migration_sim_seconds: if migrated { r.next_f64() * 2.0 } else { 0.0 },
+                    migration_host_seconds: if migrated { r.next_f64() * 0.1 } else { 0.0 },
+                    migration_hidden_sim_seconds: if migrated { r.next_f64() } else { 0.0 },
+                    migration_wire_bytes: if migrated { r.next_u64() % 10_000_000 } else { 0 },
+                    migration_full_bytes: if migrated { r.next_u64() % 10_000_000 } else { 0 },
+                    migration_used_delta: migrated && r.below(2) == 0,
+                    restart_penalty_sim_seconds: if r.below(4) == 0 {
+                        r.next_f64() * 30.0
+                    } else {
+                        0.0
+                    },
+                    migration_failed: false,
+                });
+            }
+            recs.push(RoundRecord {
+                round,
+                mean_loss: r.next_f32(),
+                accuracy: if r.below(2) == 0 { Some(r.next_f64()) } else { None },
+                aggregate_host_seconds: r.next_f64() * 0.01,
+                eval_host_seconds: r.next_f64() * 0.01,
+                devices,
+            });
+        }
+        RunReport {
+            strategy: "fedfly".into(),
+            sp: 2,
+            rounds: recs,
+            final_params: Vec::new(),
+            perf: RunPerf::default(),
+        }
+    }
+
+    /// Property: every per-migration field survives the CSV export — the
+    /// wire/full byte counts and delta flag parse back exactly, floats
+    /// within the `{:.6}` formatting precision.
+    #[test]
+    fn prop_csv_roundtrips_per_migration_fields() {
+        crate::util::prop::forall(40, |r| {
+            let rep = gen_report(r);
+            let csv = rep.to_csv();
+            let mut lines = csv.lines();
+            let header = lines.next().unwrap();
+            assert_eq!(header.split(',').count(), 15);
+            for rec in &rep.rounds {
+                for d in &rec.devices {
+                    let line = lines.next().unwrap();
+                    let cols: Vec<&str> = line.split(',').collect();
+                    assert_eq!(cols.len(), 15);
+                    assert_eq!(cols[0].parse::<u64>().unwrap(), rec.round);
+                    assert_eq!(cols[1].parse::<usize>().unwrap(), d.device);
+                    assert_eq!(cols[2].parse::<usize>().unwrap(), d.edge);
+                    let close = |txt: &str, want: f64| {
+                        let got = txt.parse::<f64>().unwrap();
+                        assert!((got - want).abs() < 1e-5, "{txt} vs {want}");
+                    };
+                    close(cols[3], d.sim_seconds);
+                    close(cols[7], d.migration_sim_seconds);
+                    close(cols[9], d.migration_hidden_sim_seconds);
+                    close(cols[13], d.restart_penalty_sim_seconds);
+                    assert_eq!(cols[6].parse::<u8>().unwrap(), d.migrated as u8);
+                    assert_eq!(cols[10].parse::<u64>().unwrap(), d.migration_wire_bytes);
+                    assert_eq!(cols[11].parse::<u64>().unwrap(), d.migration_full_bytes);
+                    assert_eq!(
+                        cols[12].parse::<u8>().unwrap(),
+                        d.migration_used_delta as u8
+                    );
+                }
+            }
+            assert!(lines.next().is_none(), "extra CSV rows");
+        });
+    }
+
+    /// Property: the JSON report parses back with the summary surface
+    /// intact (counts exact, sums bit-accurate through the shortest
+    /// round-trip float representation).
+    #[test]
+    fn prop_json_roundtrips_report_surface() {
+        crate::util::prop::forall(25, |r| {
+            let rep = gen_report(r);
+            let text = json::to_string_pretty(&rep.to_json());
+            let back = json::parse(&text).unwrap();
+            assert_eq!(back.get_str("strategy").unwrap(), "fedfly");
+            assert_eq!(back.get_usize("rounds").unwrap(), rep.n_rounds());
+            let sums = back.get("device_summaries").unwrap().as_arr().unwrap();
+            assert_eq!(sums.len(), rep.n_devices());
+            for (v, s) in sums.iter().zip(rep.summaries()) {
+                assert_eq!(v.get_usize("device").unwrap(), s.device);
+                assert_eq!(
+                    v.get_f64("total_migration_wire_bytes").unwrap() as u64,
+                    s.total_migration_wire_bytes
+                );
+                assert_eq!(
+                    v.get_f64("total_migration_full_bytes").unwrap() as u64,
+                    s.total_migration_full_bytes
+                );
+                let hidden = v.get_f64("total_migration_hidden").unwrap();
+                assert!((hidden - s.total_migration_hidden).abs() < 1e-9);
+                assert_eq!(v.get_usize("moves").unwrap(), s.moves);
+                assert_eq!(
+                    v.get_usize("delta_migrations").unwrap(),
+                    s.delta_migrations
+                );
+            }
+            assert!(back.get("obs").is_ok());
+        });
     }
 }

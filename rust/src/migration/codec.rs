@@ -138,13 +138,19 @@ pub fn unwrap_envelope(bytes: &[u8]) -> Result<Cow<'_, [u8]>> {
 /// matching base fails with [`Error::DeltaBaseMissing`] so the sender can
 /// fall back to full encoding.
 pub fn decode_with(bytes: &[u8], base: Option<&DeltaBase>) -> Result<Checkpoint> {
+    let t0 = std::time::Instant::now();
     let raw = unwrap_envelope(bytes)?;
     let raw = raw.as_ref();
-    if raw.len() >= 4 && &raw[..4] == MAGIC_D {
+    let res = if raw.len() >= 4 && &raw[..4] == MAGIC_D {
         decode_delta(raw, base)
     } else {
         decode(raw)
+    };
+    if res.is_ok() {
+        crate::obs::metric::wellknown::DECODE_LATENCY_US
+            .observe_seconds(t0.elapsed().as_secs_f64());
     }
+    res
 }
 
 /// Decode either self-contained envelope: raw (`FDFL...`) or compressed
@@ -464,10 +470,12 @@ pub fn encode_for_transfer(
         Some(level) => compress_envelope(&raw, level)?,
         None => raw,
     };
+    let encode_seconds = t0.elapsed().as_secs_f64();
+    crate::obs::metric::wellknown::ENCODE_LATENCY_US.observe_seconds(encode_seconds);
     Ok(EncodedCheckpoint {
         blob,
         used_delta,
-        encode_seconds: t0.elapsed().as_secs_f64(),
+        encode_seconds,
     })
 }
 

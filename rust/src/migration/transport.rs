@@ -32,6 +32,7 @@ use crate::error::{Error, Result};
 use crate::migration::codec::{
     self, decode, encode_for_transfer, Checkpoint, DeltaBase, ZSTD_LEVEL,
 };
+use crate::obs::metric::wellknown as om;
 use crate::proto::{read_msg, write_msg, Msg, MAX_PAYLOAD};
 
 /// Default streaming chunk size: large enough to amortize frame overhead,
@@ -110,6 +111,7 @@ impl StreamAssembler {
 
     /// Append one chunk, failing fast on overrun or a bad magic.
     pub fn push(&mut self, chunk: &[u8]) -> Result<()> {
+        om::STREAM_CHUNKS_TOTAL.inc();
         if self.buf.len() + chunk.len() > self.total {
             return Err(Error::Codec(format!(
                 "checkpoint stream overruns declared length {} ({} received + {} pushed)",
@@ -235,6 +237,7 @@ impl Default for InMemTransport {
 
 impl Transport for InMemTransport {
     fn send(&self, dest: usize, ck: &Checkpoint) -> Result<TransferStats> {
+        let _span = crate::span!("transport_send", dest = dest, device = ck.device_id);
         let t0 = Instant::now();
         let send_base = self.send_bases.lock().unwrap().get(&dest).cloned();
         let recv_base = self.recv_bases.lock().unwrap().get(&dest).cloned();
@@ -261,6 +264,7 @@ impl Transport for InMemTransport {
             Err(Error::DeltaBaseMissing { .. }) => {
                 // destination cannot prove it holds the base: re-encode
                 // full and charge the wire for both attempts
+                om::MIGRATION_DELTA_FALLBACK_TOTAL.inc();
                 let retry = encode_for_transfer(ck, None, self.zstd_level)?;
                 stats.wire_bytes += retry.blob.len();
                 stats.used_delta = false;
@@ -277,6 +281,13 @@ impl Transport for InMemTransport {
             .or_default()
             .push_back(decoded);
         stats.host_seconds = t0.elapsed().as_secs_f64();
+        om::MIGRATIONS_TOTAL.inc();
+        om::MIGRATION_WIRE_BYTES_TOTAL.add(stats.wire_bytes as u64);
+        om::MIGRATION_FULL_BYTES_TOTAL.add(stats.full_bytes as u64);
+        if stats.used_delta {
+            om::MIGRATION_DELTA_TOTAL.inc();
+        }
+        om::MAILBOX_DEPTH.add(1);
         Ok(stats)
     }
 
@@ -288,6 +299,9 @@ impl Transport for InMemTransport {
         let ck = q.pop_front();
         if q.is_empty() {
             boxes.remove(&(dest, device));
+        }
+        if ck.is_some() {
+            om::MAILBOX_DEPTH.add(-1);
         }
         Ok(ck)
     }
@@ -365,6 +379,7 @@ fn serve_conn(mut stream: TcpStream, shared: &ServerShared) {
                 match StreamAssembler::new(total_len as usize) {
                     Ok(a) => asm = Some((device, a)),
                     Err(_) => {
+                        om::ack(1);
                         let _ = write_msg(&mut stream, &Msg::Ack { code: 1 });
                         return;
                     }
@@ -374,11 +389,13 @@ fn serve_conn(mut stream: TcpStream, shared: &ServerShared) {
                 let pushed = match asm.as_mut() {
                     Some((dev, a)) if *dev == device => a.push(&data),
                     _ => {
+                        om::ack(2);
                         let _ = write_msg(&mut stream, &Msg::Ack { code: 2 });
                         return;
                     }
                 };
                 if pushed.is_err() {
+                    om::ack(1);
                     let _ = write_msg(&mut stream, &Msg::Ack { code: 1 });
                     return;
                 }
@@ -392,6 +409,7 @@ fn serve_conn(mut stream: TcpStream, shared: &ServerShared) {
                         Ok(frame) => shared.ingest(dev, frame),
                         Err(_) => 1,
                     };
+                    om::ack(code);
                     let _ = write_msg(&mut stream, &Msg::Ack { code });
                     if code == 0 {
                         shared.mark_completed();
@@ -412,6 +430,7 @@ fn serve_conn(mut stream: TcpStream, shared: &ServerShared) {
                     },
                     Err(_) => 1,
                 };
+                om::ack(code);
                 let _ = write_msg(&mut stream, &Msg::Ack { code });
                 if code == 0 {
                     shared.mark_completed();
@@ -419,6 +438,7 @@ fn serve_conn(mut stream: TcpStream, shared: &ServerShared) {
             }
             Msg::Bye => return,
             _ => {
+                om::ack(2);
                 let _ = write_msg(&mut stream, &Msg::Ack { code: 2 });
                 return;
             }
@@ -589,6 +609,7 @@ pub fn send_checkpoint_tcp_opts(
     base: Option<&DeltaBase>,
     opts: &TcpOpts,
 ) -> Result<TransferStats> {
+    let _span = crate::span!("transport_send_tcp", device = ck.device_id);
     let enc = encode_for_transfer(ck, base, opts.zstd_level)?;
     let mut stats = TransferStats {
         wire_bytes: enc.blob.len(),
@@ -597,6 +618,7 @@ pub fn send_checkpoint_tcp_opts(
         encode_seconds: enc.encode_seconds,
         ..Default::default()
     };
+    om::MIGRATION_WIRE_BYTES_TOTAL.add(enc.blob.len() as u64);
     let t0 = Instant::now();
     let mut stream = TcpStream::connect_timeout(&dest, opts.connect_timeout).map_err(|e| {
         if matches!(
@@ -619,16 +641,25 @@ pub fn send_checkpoint_tcp_opts(
     if code == 5 && enc.used_delta {
         // destination cannot prove it holds the base: resend full,
         // charging the wire for both attempts
+        om::MIGRATION_DELTA_FALLBACK_TOTAL.inc();
         let retry = encode_for_transfer(ck, None, opts.zstd_level)?;
         stats.wire_bytes += retry.blob.len();
         stats.used_delta = false;
         stats.encode_seconds += retry.encode_seconds;
+        om::MIGRATION_WIRE_BYTES_TOTAL.add(retry.blob.len() as u64);
         code = stream_blob(&mut stream, ck.device_id, &retry.blob, opts.chunk_bytes)
             .map_err(|e| map_timeout(e, "resending full checkpoint"))?;
     }
     stats.host_seconds = t0.elapsed().as_secs_f64();
     match code {
-        0 => Ok(stats),
+        0 => {
+            om::MIGRATIONS_TOTAL.inc();
+            om::MIGRATION_FULL_BYTES_TOTAL.add(stats.full_bytes as u64);
+            if stats.used_delta {
+                om::MIGRATION_DELTA_TOTAL.inc();
+            }
+            Ok(stats)
+        }
         c => Err(Error::Proto(format!("destination rejected: code {c}"))),
     }
 }
@@ -771,6 +802,35 @@ mod tests {
         asm.push(&blob[..blob.len() - 1]).unwrap();
         assert!(!asm.is_complete());
         assert!(asm.finish().is_err());
+    }
+
+    /// Malformed streams must surface typed `Error::Codec` values — never
+    /// panics and never a silent `Ok` — so `serve_conn` can turn each into
+    /// a protocol ack instead of tearing down the listener thread.
+    #[test]
+    fn assembler_malformed_frames_yield_codec_errors() {
+        // declared length below the smallest possible frame
+        assert!(matches!(StreamAssembler::new(4), Err(Error::Codec(_))));
+        // declared length above the protocol's frame ceiling
+        assert!(matches!(
+            StreamAssembler::new(MAX_PAYLOAD as usize + 1),
+            Err(Error::Codec(_))
+        ));
+
+        // wrong magic rejected as soon as four bytes exist
+        let mut asm = StreamAssembler::new(64).unwrap();
+        assert!(matches!(asm.push(b"XXXXrest"), Err(Error::Codec(_))));
+
+        // overrun past the declared length
+        let mut asm = StreamAssembler::new(16).unwrap();
+        assert!(matches!(asm.push(&[0u8; 32]), Err(Error::Codec(_))));
+
+        // truncated stream: finish() with bytes missing
+        let c = ck(11, 64);
+        let blob = encode(&c);
+        let mut asm = StreamAssembler::new(blob.len()).unwrap();
+        asm.push(&blob[..blob.len() / 2]).unwrap();
+        assert!(matches!(asm.finish(), Err(Error::Codec(_))));
     }
 
     #[test]

@@ -92,10 +92,13 @@ pub struct OverlappedTransfer {
 /// the window delays the device.
 pub fn overlap(total: f64, window: f64) -> OverlappedTransfer {
     let hidden = total.min(window.max(0.0));
+    let charged = total - hidden;
+    crate::obs::metric::wellknown::SIM_MIGRATION_CHARGED_US_TOTAL.add_seconds(charged);
+    crate::obs::metric::wellknown::SIM_MIGRATION_HIDDEN_US_TOTAL.add_seconds(hidden);
     OverlappedTransfer {
         total,
         hidden,
-        charged: total - hidden,
+        charged,
     }
 }
 

@@ -1,0 +1,332 @@
+//! Trace and metric exporters.
+//!
+//! * Chrome `trace_event` JSON — load the `--trace-out` file in Perfetto
+//!   (ui.perfetto.dev) or `chrome://tracing`; spans appear per-thread
+//!   with their arguments, instants as markers.
+//! * JSONL — one event object per line, for ad-hoc `grep`/`jq` analysis.
+//! * Prometheus text exposition — served over the distributed-mode
+//!   control socket (`Msg::MetricsRequest`) and writable next to the
+//!   trace; also embedded in `RunReport::to_json` under `"obs"`.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::error::Result;
+use crate::json::{self, Value};
+use crate::obs::metric::{wellknown, Counter, Gauge, Histogram, HIST_BOUNDS_US};
+use crate::obs::span::{ArgVal, Event, EventKind, Trace};
+
+fn arg_value(v: &ArgVal) -> Value {
+    match v {
+        ArgVal::U(u) => json::num(*u as f64),
+        ArgVal::I(i) => json::num(*i as f64),
+        ArgVal::F(f) => json::num(*f),
+        ArgVal::S(s) => json::s(*s),
+        ArgVal::B(b) => Value::Bool(*b),
+    }
+}
+
+/// One event as a Chrome `trace_event` object (`ts`/`dur` in fractional
+/// microseconds — the format's unit — computed from our nanoseconds).
+fn event_value(e: &Event) -> Value {
+    let mut fields = vec![
+        ("name", json::s(e.name)),
+        ("cat", json::s(e.cat)),
+        (
+            "ph",
+            json::s(match e.kind {
+                EventKind::Complete => "X",
+                EventKind::Instant => "i",
+            }),
+        ),
+        ("ts", json::num(e.ts_ns as f64 / 1000.0)),
+        ("pid", json::num(1.0)),
+        ("tid", json::num(e.tid as f64)),
+    ];
+    match e.kind {
+        EventKind::Complete => fields.push(("dur", json::num(e.dur_ns as f64 / 1000.0))),
+        EventKind::Instant => fields.push(("s", json::s("t"))),
+    }
+    if !e.args.is_empty() {
+        fields.push((
+            "args",
+            json::obj(e.args.iter().map(|(k, v)| (*k, arg_value(v))).collect()),
+        ));
+    }
+    json::obj(fields)
+}
+
+/// The full Chrome `trace_event` document for a drained trace: one
+/// `thread_name` metadata record per thread, then every event.
+pub fn chrome_trace(trace: &Trace) -> Value {
+    let mut events: Vec<Value> = trace
+        .threads
+        .iter()
+        .map(|(tid, name)| {
+            json::obj(vec![
+                ("name", json::s("thread_name")),
+                ("ph", json::s("M")),
+                ("pid", json::num(1.0)),
+                ("tid", json::num(*tid as f64)),
+                ("args", json::obj(vec![("name", json::s(name.clone()))])),
+            ])
+        })
+        .collect();
+    events.extend(trace.events.iter().map(event_value));
+    json::obj(vec![
+        ("traceEvents", json::arr(events)),
+        ("displayTimeUnit", json::s("ms")),
+        ("droppedEvents", json::num(trace.dropped as f64)),
+    ])
+}
+
+pub fn write_chrome_trace(path: &Path, trace: &Trace) -> Result<()> {
+    std::fs::write(path, json::to_string(&chrome_trace(trace)))?;
+    Ok(())
+}
+
+/// One JSON object per line per event (same shape as the Chrome events).
+pub fn write_jsonl(path: &Path, trace: &Trace) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for e in &trace.events {
+        writeln!(f, "{}", json::to_string(&event_value(e)))?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// A point-in-time reading of one named metric.  Names may carry a
+/// Prometheus label suffix (`fedfly_acks_total{code="5"}`).
+pub struct MetricSnapshot {
+    pub name: String,
+    pub value: MetricValue,
+}
+
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(i64),
+    Histogram {
+        /// `(upper bound µs, cumulative count ≤ bound)` per bucket; the
+        /// final bound `u64::MAX` is the `+Inf` bucket.
+        buckets: Vec<(u64, u64)>,
+        count: u64,
+        sum_us: u64,
+    },
+}
+
+fn c(name: &str, m: &Counter) -> MetricSnapshot {
+    MetricSnapshot { name: name.to_string(), value: MetricValue::Counter(m.get()) }
+}
+
+fn g(name: &str, m: &Gauge) -> MetricSnapshot {
+    MetricSnapshot { name: name.to_string(), value: MetricValue::Gauge(m.get()) }
+}
+
+fn h(name: &str, m: &Histogram) -> MetricSnapshot {
+    let counts = m.bucket_counts();
+    let mut cum = 0u64;
+    let mut buckets = Vec::with_capacity(counts.len());
+    for (i, &n) in counts.iter().enumerate() {
+        cum += n;
+        buckets.push((HIST_BOUNDS_US[i], cum));
+    }
+    MetricSnapshot {
+        name: name.to_string(),
+        value: MetricValue::Histogram { buckets, count: m.count(), sum_us: m.sum_us() },
+    }
+}
+
+/// Read every well-known metric.
+pub fn snapshot() -> Vec<MetricSnapshot> {
+    use wellknown as w;
+    let mut out = vec![
+        c("fedfly_rounds_total", &w::ROUNDS_TOTAL),
+        c("fedfly_migrations_total", &w::MIGRATIONS_TOTAL),
+        c("fedfly_migration_wire_bytes_total", &w::MIGRATION_WIRE_BYTES_TOTAL),
+        c("fedfly_migration_full_bytes_total", &w::MIGRATION_FULL_BYTES_TOTAL),
+        c("fedfly_migration_delta_total", &w::MIGRATION_DELTA_TOTAL),
+        c(
+            "fedfly_migration_delta_fallback_total",
+            &w::MIGRATION_DELTA_FALLBACK_TOTAL,
+        ),
+        c("fedfly_stream_chunks_total", &w::STREAM_CHUNKS_TOTAL),
+        c("fedfly_barrier_wait_us_total", &w::BARRIER_WAIT_US_TOTAL),
+        c("fedfly_worker_busy_us_total", &w::WORKER_BUSY_US_TOTAL),
+        c(
+            "fedfly_sim_migration_charged_us_total",
+            &w::SIM_MIGRATION_CHARGED_US_TOTAL,
+        ),
+        c(
+            "fedfly_sim_migration_hidden_us_total",
+            &w::SIM_MIGRATION_HIDDEN_US_TOTAL,
+        ),
+        c("fedfly_sim_round_us_total", &w::SIM_ROUND_US_TOTAL),
+        g("fedfly_parked_batches", &w::PARKED_BATCHES),
+        g("fedfly_mailbox_depth", &w::MAILBOX_DEPTH),
+        h("fedfly_encode_latency_us", &w::ENCODE_LATENCY_US),
+        h("fedfly_decode_latency_us", &w::DECODE_LATENCY_US),
+    ];
+    for (code, m) in w::ACKS_BY_CODE.iter().enumerate() {
+        out.push(c(&format!("fedfly_acks_total{{code=\"{code}\"}}"), m));
+    }
+    out
+}
+
+/// Prometheus text exposition of every well-known metric.
+pub fn prometheus_text() -> String {
+    let mut out = String::new();
+    let mut last_type = String::new();
+    for m in snapshot() {
+        let bare = m.name.split('{').next().unwrap_or(&m.name).to_string();
+        match &m.value {
+            MetricValue::Counter(v) => {
+                if bare != last_type {
+                    let _ = writeln!(out, "# TYPE {bare} counter");
+                }
+                let _ = writeln!(out, "{} {}", m.name, v);
+            }
+            MetricValue::Gauge(v) => {
+                if bare != last_type {
+                    let _ = writeln!(out, "# TYPE {bare} gauge");
+                }
+                let _ = writeln!(out, "{} {}", m.name, v);
+            }
+            MetricValue::Histogram { buckets, count, sum_us } => {
+                if bare != last_type {
+                    let _ = writeln!(out, "# TYPE {bare} histogram");
+                }
+                for (bound, cum) in buckets {
+                    if *bound == u64::MAX {
+                        let _ = writeln!(out, "{bare}_bucket{{le=\"+Inf\"}} {cum}");
+                    } else {
+                        let _ = writeln!(out, "{bare}_bucket{{le=\"{bound}\"}} {cum}");
+                    }
+                }
+                let _ = writeln!(out, "{bare}_sum {sum_us}");
+                let _ = writeln!(out, "{bare}_count {count}");
+            }
+        }
+        last_type = bare;
+    }
+    out
+}
+
+/// All well-known metrics as one JSON object, embedded in
+/// `RunReport::to_json` under `"obs"`.  Histogram buckets are
+/// `[bound_us, cumulative]` pairs; the `+Inf` bound is encoded as `-1`
+/// (JSON has no infinity).
+pub fn metrics_json() -> Value {
+    let mut map = BTreeMap::new();
+    for m in snapshot() {
+        let v = match m.value {
+            MetricValue::Counter(v) => json::num(v as f64),
+            MetricValue::Gauge(v) => json::num(v as f64),
+            MetricValue::Histogram { buckets, count, sum_us } => json::obj(vec![
+                ("count", json::num(count as f64)),
+                ("sum_us", json::num(sum_us as f64)),
+                (
+                    "buckets",
+                    json::arr(
+                        buckets
+                            .iter()
+                            .map(|(b, n)| {
+                                let bound = if *b == u64::MAX { -1.0 } else { *b as f64 };
+                                json::arr(vec![json::num(bound), json::num(*n as f64)])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+        };
+        map.insert(m.name, v);
+    }
+    Value::Obj(map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(name: &'static str, kind: EventKind, ts_ns: u64, dur_ns: u64) -> Event {
+        Event {
+            tid: 1,
+            name,
+            cat: "test",
+            kind,
+            ts_ns,
+            dur_ns,
+            depth: 0,
+            args: vec![("device", ArgVal::U(2)), ("mode", ArgVal::S("sim"))],
+        }
+    }
+
+    fn sample_trace() -> Trace {
+        Trace {
+            events: vec![
+                ev("round", EventKind::Complete, 1_500, 2_250_000),
+                ev("mark", EventKind::Instant, 2_000, 0),
+            ],
+            threads: vec![(1, "main".to_string())],
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn chrome_trace_is_parseable_and_microsecond_scaled() {
+        let v = chrome_trace(&sample_trace());
+        let text = json::to_string(&v);
+        let back = json::parse(&text).unwrap();
+        let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3); // thread_name + 2 events
+        assert_eq!(events[0].get_str("ph").unwrap(), "M");
+        let round = &events[1];
+        assert_eq!(round.get_str("ph").unwrap(), "X");
+        assert!((round.get_f64("ts").unwrap() - 1.5).abs() < 1e-9);
+        assert!((round.get_f64("dur").unwrap() - 2250.0).abs() < 1e-9);
+        assert_eq!(round.get("args").unwrap().get_usize("device").unwrap(), 2);
+        assert_eq!(events[2].get_str("ph").unwrap(), "i");
+    }
+
+    #[test]
+    fn jsonl_has_one_parseable_object_per_event() {
+        let dir = std::env::temp_dir().join(format!("fedfly_export_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        write_jsonl(&path, &sample_trace()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            json::parse(line).unwrap();
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prometheus_text_shape() {
+        let text = prometheus_text();
+        assert!(text.contains("# TYPE fedfly_rounds_total counter"));
+        assert!(text.contains("# TYPE fedfly_parked_batches gauge"));
+        assert!(text.contains("# TYPE fedfly_encode_latency_us histogram"));
+        assert!(text.contains("fedfly_encode_latency_us_bucket{le=\"+Inf\"}"));
+        assert!(text.contains("fedfly_acks_total{code=\"5\"}"));
+        // one TYPE line per metric family, even for the labeled acks
+        assert_eq!(text.matches("# TYPE fedfly_acks_total counter").count(), 1);
+        // exposition is plain "name value" lines and comments only
+        for line in text.lines() {
+            assert!(line.starts_with('#') || line.split(' ').count() == 2, "bad line: {line}");
+        }
+    }
+
+    #[test]
+    fn metrics_json_parses_back() {
+        let text = json::to_string_pretty(&metrics_json());
+        let back = json::parse(&text).unwrap();
+        assert!(back.get("fedfly_rounds_total").is_ok());
+        let h = back.get("fedfly_decode_latency_us").unwrap();
+        assert!(h.get_f64("sum_us").is_ok());
+        let buckets = h.get("buckets").unwrap().as_arr().unwrap();
+        assert_eq!(buckets.len(), HIST_BOUNDS_US.len());
+    }
+}

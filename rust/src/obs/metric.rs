@@ -1,0 +1,292 @@
+//! Lock-free metrics: counters, gauges, and fixed-bucket histograms.
+//!
+//! Every metric is a const-initialized static of atomics — there is no
+//! registration step, no hash map, and no lock anywhere on the update
+//! path.  The process-wide set of metrics lives in [`wellknown`]; the
+//! exporters in [`super::export`] enumerate it for Prometheus text,
+//! `RunReport` JSON, and the distributed-mode metrics frame.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+/// A monotonically increasing counter (relaxed `fetch_add`).
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if super::metrics_enabled() {
+            self.v.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add a non-negative quantity expressed in seconds as whole µs.
+    #[inline]
+    pub fn add_seconds(&self, s: f64) {
+        if s.is_finite() && s > 0.0 {
+            self.add((s * 1e6) as u64);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A gauge: a signed value that can move both ways (depths, in-flight).
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge { v: AtomicI64::new(0) }
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        if super::metrics_enabled() {
+            self.v.store(v, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        if super::metrics_enabled() {
+            self.v.fetch_add(d, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Histogram bucket upper bounds in microseconds: powers of 4 from 1 µs
+/// to ~4.5 min, with `u64::MAX` as the `+Inf` overflow bucket.  Sixteen
+/// buckets cover sub-µs counter bumps up to multi-minute transfers.
+pub const HIST_BOUNDS_US: [u64; 16] = [
+    1,
+    4,
+    16,
+    64,
+    256,
+    1_024,
+    4_096,
+    16_384,
+    65_536,
+    262_144,
+    1_048_576,
+    4_194_304,
+    16_777_216,
+    67_108_864,
+    268_435_456,
+    u64::MAX,
+];
+
+/// A fixed-bucket latency histogram (µs).  `observe` is a linear scan of
+/// 16 bounds plus three relaxed `fetch_add`s — no locks, no allocation.
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BOUNDS_US.len()],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        #[allow(clippy::declare_interior_mutable_const)]
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            buckets: [Z; HIST_BOUNDS_US.len()],
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn observe_us(&self, us: u64) {
+        if !super::metrics_enabled() {
+            return;
+        }
+        let mut i = 0;
+        // terminates: the last bound is u64::MAX
+        while us > HIST_BOUNDS_US[i] {
+            i += 1;
+        }
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn observe_seconds(&self, s: f64) {
+        if s.is_finite() && s >= 0.0 {
+            self.observe_us((s * 1e6) as u64);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    pub fn bucket_counts(&self) -> [u64; HIST_BOUNDS_US.len()] {
+        let mut out = [0u64; HIST_BOUNDS_US.len()];
+        for (o, b) in out.iter_mut().zip(self.buckets.iter()) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The process-wide metric set, threaded through the coordinator,
+/// migration, and simulation layers.
+pub mod wellknown {
+    use super::{Counter, Gauge, Histogram};
+
+    /// FL rounds the coordinator completed.
+    pub static ROUNDS_TOTAL: Counter = Counter::new();
+    /// Checkpoint transfers initiated (in-memory, TCP, and distributed).
+    pub static MIGRATIONS_TOTAL: Counter = Counter::new();
+    /// Encoded checkpoint bytes that crossed a wire, all attempts
+    /// (an Ack-5 fallback charges both the delta and the full frame).
+    pub static MIGRATION_WIRE_BYTES_TOTAL: Counter = Counter::new();
+    /// Uncompressed full-checkpoint bytes those transfers represent.
+    pub static MIGRATION_FULL_BYTES_TOTAL: Counter = Counter::new();
+    /// Transfers that landed via the delta encoding.
+    pub static MIGRATION_DELTA_TOTAL: Counter = Counter::new();
+    /// Delta attempts rejected (Ack code 5) and re-sent as full frames.
+    pub static MIGRATION_DELTA_FALLBACK_TOTAL: Counter = Counter::new();
+    /// Chunks pushed through `StreamAssembler`s.
+    pub static STREAM_CHUNKS_TOTAL: Counter = Counter::new();
+    /// Protocol acks by code; the last slot counts "code ≥ 9".
+    pub static ACKS_BY_CODE: [Counter; 10] = [
+        Counter::new(),
+        Counter::new(),
+        Counter::new(),
+        Counter::new(),
+        Counter::new(),
+        Counter::new(),
+        Counter::new(),
+        Counter::new(),
+        Counter::new(),
+        Counter::new(),
+    ];
+    /// Smashed batches parked at a destination edge awaiting a checkpoint.
+    pub static PARKED_BATCHES: Gauge = Gauge::new();
+    /// Checkpoints queued in `InMemTransport` mailboxes.
+    pub static MAILBOX_DEPTH: Gauge = Gauge::new();
+    /// Worker-pool barrier wait, accumulated µs across workers.
+    pub static BARRIER_WAIT_US_TOTAL: Counter = Counter::new();
+    /// Worker busy time, accumulated µs across workers.
+    pub static WORKER_BUSY_US_TOTAL: Counter = Counter::new();
+    /// Checkpoint encode latency (host µs).
+    pub static ENCODE_LATENCY_US: Histogram = Histogram::new();
+    /// Checkpoint decode latency (host µs).
+    pub static DECODE_LATENCY_US: Histogram = Histogram::new();
+    /// Simulated migration seconds charged to the critical path, as µs.
+    pub static SIM_MIGRATION_CHARGED_US_TOTAL: Counter = Counter::new();
+    /// Simulated transfer seconds hidden behind pre-copy windows, as µs.
+    pub static SIM_MIGRATION_HIDDEN_US_TOTAL: Counter = Counter::new();
+    /// Simulated device round seconds accounted by `timesim`, as µs.
+    pub static SIM_ROUND_US_TOTAL: Counter = Counter::new();
+
+    /// Count a protocol ack by code (codes ≥ 9 share the last slot).
+    pub fn ack(code: u32) {
+        let i = (code as usize).min(ACKS_BY_CODE.len() - 1);
+        ACKS_BY_CODE[i].inc();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let _g = crate::obs::test_guard();
+        static C: Counter = Counter::new();
+        static G: Gauge = Gauge::new();
+        C.inc();
+        C.add(4);
+        C.add_seconds(0.5); // 500_000 µs
+        assert_eq!(C.get(), 500_005);
+        G.set(3);
+        G.add(-5);
+        assert_eq!(G.get(), -2);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_by_bound() {
+        let _g = crate::obs::test_guard();
+        static H: Histogram = Histogram::new();
+        H.observe_us(0); // ≤ 1
+        H.observe_us(1); // ≤ 1
+        H.observe_us(2); // ≤ 4
+        H.observe_us(1_000_000); // ≤ 1_048_576
+        H.observe_seconds(f64::NAN); // ignored
+        let counts = H.bucket_counts();
+        assert_eq!(counts[0], 2);
+        assert_eq!(counts[1], 1);
+        assert_eq!(counts[10], 1);
+        assert_eq!(H.count(), 4);
+        assert_eq!(H.sum_us(), 1_000_003);
+    }
+
+    #[test]
+    fn disabled_metrics_drop_updates() {
+        let _g = crate::obs::test_guard();
+        static C: Counter = Counter::new();
+        crate::obs::set_metrics_enabled(false);
+        C.add(10);
+        crate::obs::set_metrics_enabled(true);
+        assert_eq!(C.get(), 0);
+        C.inc();
+        assert_eq!(C.get(), 1);
+    }
+
+    #[test]
+    fn ack_codes_clamp_to_last_slot() {
+        let _g = crate::obs::test_guard();
+        // slots 8/9 are not acked by any lib unit test, so exact deltas
+        // are safe even with tests running concurrently
+        let before8 = wellknown::ACKS_BY_CODE[8].get();
+        let before9 = wellknown::ACKS_BY_CODE[9].get();
+        wellknown::ack(8);
+        wellknown::ack(9);
+        wellknown::ack(42);
+        assert_eq!(wellknown::ACKS_BY_CODE[8].get() - before8, 1);
+        assert_eq!(wellknown::ACKS_BY_CODE[9].get() - before9, 2);
+    }
+}

@@ -1,0 +1,108 @@
+//! Zero-dependency observability: spans, metrics, and trace exporters.
+//!
+//! FedFly's claims are about *time* — where a round's wall-clock goes, how
+//! much of a checkpoint transfer hides behind the pre-copy window, what a
+//! migration costs on the wire.  This module makes that inspectable:
+//!
+//! * [`span!`] / [`SpanGuard`] — scoped spans with thread-local buffers
+//!   and monotonic timestamps, drained into a global sink and exported as
+//!   Chrome `trace_event` JSON (Perfetto / `chrome://tracing`) or JSONL.
+//! * [`metric`] — named counters/gauges/histograms as const-initialized
+//!   atomics; no locks and no registration on the hot path.
+//! * [`export`] — Chrome trace, JSONL, Prometheus text exposition, and a
+//!   JSON dump embedded in `RunReport::to_json`.
+//!
+//! Tracing is **off by default**.  Disabled, `span!` costs one relaxed
+//! atomic load and records nothing, so determinism and bit-exactness
+//! guarantees hold unchanged; metrics are always-on atomics that never
+//! feed back into training.
+
+pub mod export;
+pub mod metric;
+pub mod span;
+
+pub use metric::{Counter, Gauge, Histogram};
+pub use span::{
+    complete_at, drain, flush_thread, instant, ArgVal, Event, EventKind, SpanGuard, Trace,
+};
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Default per-thread event-buffer capacity (events, not bytes) used by
+/// [`enable`].  A buffer spills to the global sink when it fills.
+pub const DEFAULT_RING_CAPACITY: usize = 64 * 1024;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RING_CAPACITY: AtomicUsize = AtomicUsize::new(0);
+static METRICS_ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Whether span recording is on.  This is THE hot-path check: a single
+/// relaxed load, so a disabled tracer costs one well-predicted branch.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Whether metric updates are applied (on by default; counters are cheap
+/// and deterministic-output-neutral, but benches want the floor too).
+#[inline(always)]
+pub fn metrics_enabled() -> bool {
+    METRICS_ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn set_metrics_enabled(on: bool) {
+    METRICS_ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Turn span recording on with [`DEFAULT_RING_CAPACITY`].
+pub fn enable() {
+    enable_with_capacity(DEFAULT_RING_CAPACITY);
+}
+
+/// Turn span recording on with an explicit per-thread buffer capacity.
+/// Capacity 0 keeps tracing off — the `--no-trace` contract.
+pub fn enable_with_capacity(capacity: usize) {
+    if capacity == 0 {
+        disable();
+        return;
+    }
+    span::init_epoch();
+    RING_CAPACITY.store(capacity, Ordering::Relaxed);
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn span recording off.  Already-buffered events stay drainable.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+    RING_CAPACITY.store(0, Ordering::Relaxed);
+}
+
+pub(crate) fn ring_capacity() -> usize {
+    RING_CAPACITY.load(Ordering::Relaxed)
+}
+
+/// Open a scope-tied span: `let _g = span!("round", round = r);`.
+/// Records one `trace_event` "X" event when the guard drops; the span's
+/// category is the invoking module path.  Disabled, this is a single
+/// relaxed atomic load returning an inert guard.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::obs::SpanGuard::enter($name, module_path!(), &[])
+    };
+    ($name:expr $(, $key:ident = $val:expr)+ $(,)?) => {
+        $crate::obs::SpanGuard::enter(
+            $name,
+            module_path!(),
+            &[$((stringify!($key), $crate::obs::ArgVal::from($val))),+],
+        )
+    };
+}
+
+/// Serializes unit tests that toggle the global enable flags or drain the
+/// global sink; `cargo test` runs lib tests concurrently in one process.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}

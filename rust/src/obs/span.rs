@@ -1,0 +1,411 @@
+//! Span recording: thread-local bounded event buffers, a global sink,
+//! and RAII guards with monotonic nanosecond timestamps.
+//!
+//! Each thread owns a plain `Vec<Event>` behind a `thread_local!` —
+//! recording a span never takes a lock; the buffer spills into the global
+//! sink (one short mutex hold) only when it reaches the configured ring
+//! capacity or the thread exits.  Timestamps are nanoseconds since a
+//! process-wide epoch `Instant`, so they are monotonic across threads and
+//! survive conversion to Chrome's microsecond `ts` without losing the
+//! sub-microsecond resolution the 1%-reconciliation tests rely on.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Event kinds, mirroring Chrome `trace_event` phases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A closed span with a duration (`ph: "X"`).
+    Complete,
+    /// A point-in-time marker (`ph: "i"`).
+    Instant,
+}
+
+/// One typed span argument value (kept unboxed; names are `&'static str`
+/// so recording never formats or allocates strings).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArgVal {
+    U(u64),
+    I(i64),
+    F(f64),
+    S(&'static str),
+    B(bool),
+}
+
+impl From<u64> for ArgVal {
+    fn from(v: u64) -> Self {
+        ArgVal::U(v)
+    }
+}
+impl From<u32> for ArgVal {
+    fn from(v: u32) -> Self {
+        ArgVal::U(v as u64)
+    }
+}
+impl From<usize> for ArgVal {
+    fn from(v: usize) -> Self {
+        ArgVal::U(v as u64)
+    }
+}
+impl From<i64> for ArgVal {
+    fn from(v: i64) -> Self {
+        ArgVal::I(v)
+    }
+}
+impl From<f64> for ArgVal {
+    fn from(v: f64) -> Self {
+        ArgVal::F(v)
+    }
+}
+impl From<&'static str> for ArgVal {
+    fn from(v: &'static str) -> Self {
+        ArgVal::S(v)
+    }
+}
+impl From<bool> for ArgVal {
+    fn from(v: bool) -> Self {
+        ArgVal::B(v)
+    }
+}
+
+/// A recorded trace event.  Timestamps/durations are nanoseconds relative
+/// to the trace epoch.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub tid: u64,
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub kind: EventKind,
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    /// Nesting level of the span on its thread at record time (0 = top).
+    pub depth: u32,
+    pub args: Vec<(&'static str, ArgVal)>,
+}
+
+/// Everything drained from the sink: time-ordered events, the
+/// `(tid, thread name)` table, and how many events were dropped because
+/// the sink hit its hard cap.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub events: Vec<Event>,
+    pub threads: Vec<(u64, String)>,
+    pub dropped: u64,
+}
+
+/// Hard cap on events the global sink retains; past it events are counted
+/// as dropped instead of buffered — a runaway trace must not eat the heap.
+const MAX_SINK_EVENTS: usize = 4_000_000;
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Fix the trace time origin (idempotent); called from `obs::enable*`.
+pub(crate) fn init_epoch() {
+    let _ = EPOCH.set(Instant::now());
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn ns_since_epoch(at: Instant) -> u64 {
+    // `at` can predate the epoch if a span started before enable();
+    // saturate to 0 rather than panic.
+    at.checked_duration_since(epoch()).unwrap_or_default().as_nanos() as u64
+}
+
+struct Sink {
+    events: Mutex<Vec<Event>>,
+    threads: Mutex<Vec<(u64, String)>>,
+    next_tid: AtomicU64,
+    dropped: AtomicU64,
+}
+
+fn sink() -> &'static Sink {
+    static SINK: OnceLock<Sink> = OnceLock::new();
+    SINK.get_or_init(|| Sink {
+        events: Mutex::new(Vec::new()),
+        threads: Mutex::new(Vec::new()),
+        next_tid: AtomicU64::new(1),
+        dropped: AtomicU64::new(0),
+    })
+}
+
+struct ThreadBuf {
+    tid: u64,
+    depth: u32,
+    buf: Vec<Event>,
+}
+
+impl ThreadBuf {
+    fn spill(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        let s = sink();
+        let mut events = s.events.lock().unwrap_or_else(|p| p.into_inner());
+        let room = MAX_SINK_EVENTS.saturating_sub(events.len());
+        if room >= self.buf.len() {
+            events.append(&mut self.buf);
+        } else {
+            let dropped = (self.buf.len() - room) as u64;
+            events.extend(self.buf.drain(..room));
+            self.buf.clear();
+            s.dropped.fetch_add(dropped, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        self.spill();
+    }
+}
+
+thread_local! {
+    static TLS: RefCell<Option<ThreadBuf>> = const { RefCell::new(None) };
+}
+
+/// Run `f` on this thread's buffer, lazily registering the thread (and
+/// its name) with the sink.  Returns `None` during thread teardown.
+fn with_buf<R>(f: impl FnOnce(&mut ThreadBuf) -> R) -> Option<R> {
+    TLS.try_with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let buf = slot.get_or_insert_with(|| {
+            let s = sink();
+            let tid = s.next_tid.fetch_add(1, Ordering::Relaxed);
+            let name = std::thread::current()
+                .name()
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("thread-{tid}"));
+            s.threads
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .push((tid, name));
+            ThreadBuf { tid, depth: 0, buf: Vec::new() }
+        });
+        f(buf)
+    })
+    .ok()
+}
+
+fn push_event(
+    name: &'static str,
+    cat: &'static str,
+    kind: EventKind,
+    ts_ns: u64,
+    dur_ns: u64,
+    args: Vec<(&'static str, ArgVal)>,
+) {
+    let cap = super::ring_capacity();
+    if cap == 0 {
+        return;
+    }
+    let _ = with_buf(|b| {
+        let depth = b.depth;
+        b.buf.push(Event { tid: b.tid, name, cat, kind, ts_ns, dur_ns, depth, args });
+        if b.buf.len() >= cap {
+            b.spill();
+        }
+    });
+}
+
+/// RAII guard for one span; records an [`EventKind::Complete`] event
+/// covering its lifetime when dropped.  Build it through the [`span!`]
+/// macro, which supplies the module path as the category.
+///
+/// [`span!`]: crate::span
+pub struct SpanGuard {
+    name: &'static str,
+    cat: &'static str,
+    /// `None` means the guard was created with tracing disabled — the
+    /// whole guard is then inert (no `Instant::now()`, no allocation).
+    start: Option<Instant>,
+    args: Vec<(&'static str, ArgVal)>,
+}
+
+impl SpanGuard {
+    #[inline]
+    pub fn enter(
+        name: &'static str,
+        cat: &'static str,
+        args: &[(&'static str, ArgVal)],
+    ) -> SpanGuard {
+        if !super::enabled() {
+            return SpanGuard { name, cat, start: None, args: Vec::new() };
+        }
+        Self::enter_enabled(name, cat, args)
+    }
+
+    #[cold]
+    fn enter_enabled(
+        name: &'static str,
+        cat: &'static str,
+        args: &[(&'static str, ArgVal)],
+    ) -> SpanGuard {
+        let _ = with_buf(|b| b.depth += 1);
+        SpanGuard { name, cat, start: Some(Instant::now()), args: args.to_vec() }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(start) = self.start else { return };
+        let args = std::mem::take(&mut self.args);
+        let _ = with_buf(|b| b.depth = b.depth.saturating_sub(1));
+        push_event(
+            self.name,
+            self.cat,
+            EventKind::Complete,
+            ns_since_epoch(start),
+            start.elapsed().as_nanos() as u64,
+            args,
+        );
+    }
+}
+
+/// Record a closed span from an explicit `(start, dur)` pair.  Used where
+/// an existing wall-clock measurement feeds `RunPerf`: recording the very
+/// same `Instant`/`Duration` makes trace totals reconcile exactly with
+/// the perf counters instead of "within measurement noise".
+pub fn complete_at(
+    name: &'static str,
+    cat: &'static str,
+    start: Instant,
+    dur: Duration,
+    args: &[(&'static str, ArgVal)],
+) {
+    if !super::enabled() {
+        return;
+    }
+    push_event(
+        name,
+        cat,
+        EventKind::Complete,
+        ns_since_epoch(start),
+        dur.as_nanos() as u64,
+        args.to_vec(),
+    );
+}
+
+/// Record a point-in-time marker event.
+pub fn instant(name: &'static str, args: &[(&'static str, ArgVal)]) {
+    if !super::enabled() {
+        return;
+    }
+    push_event(
+        name,
+        "fedfly",
+        EventKind::Instant,
+        ns_since_epoch(Instant::now()),
+        0,
+        args.to_vec(),
+    );
+}
+
+/// Move the calling thread's buffered events into the global sink.
+pub fn flush_thread() {
+    let _ = with_buf(ThreadBuf::spill);
+}
+
+/// Flush the current thread and take every sunk event.  Events still
+/// buffered on other *live* threads stay there until those threads fill
+/// their buffer or exit — drain after joining workers for a full trace.
+pub fn drain() -> Trace {
+    flush_thread();
+    let s = sink();
+    let mut events = {
+        let mut guard = s.events.lock().unwrap_or_else(|p| p.into_inner());
+        std::mem::take(&mut *guard)
+    };
+    events.sort_by_key(|e| (e.ts_ns, e.tid));
+    let threads = s.threads.lock().unwrap_or_else(|p| p.into_inner()).clone();
+    Trace { events, threads, dropped: s.dropped.swap(0, Ordering::Relaxed) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_guard_is_inert() {
+        let _g = crate::obs::test_guard();
+        crate::obs::disable();
+        drain(); // clear anything a previous test left behind
+        {
+            let _s = crate::span!("inert_span", x = 7u64);
+        }
+        instant("inert_marker", &[]);
+        let t = drain();
+        assert!(t.events.iter().all(|e| e.name != "inert_span" && e.name != "inert_marker"));
+    }
+
+    #[test]
+    fn spans_record_nesting_args_and_order() {
+        let _g = crate::obs::test_guard();
+        crate::obs::enable_with_capacity(8);
+        drain();
+        {
+            let _outer = crate::span!("outer_span", round = 3u64, mode = "sim");
+            std::thread::sleep(Duration::from_millis(1));
+            {
+                let _inner = crate::span!("inner_span", device = 1usize);
+            }
+        }
+        instant("marker", &[("code", ArgVal::U(5))]);
+        let t = drain();
+        crate::obs::disable();
+
+        let inner = t.events.iter().find(|e| e.name == "inner_span").expect("inner");
+        let outer = t.events.iter().find(|e| e.name == "outer_span").expect("outer");
+        let marker = t.events.iter().find(|e| e.name == "marker").expect("marker");
+        assert_eq!(inner.depth, 1);
+        assert_eq!(outer.depth, 0);
+        assert_eq!(marker.kind, EventKind::Instant);
+        assert!(outer.dur_ns >= inner.dur_ns);
+        // inner closes before outer, both cover it
+        assert!(outer.ts_ns <= inner.ts_ns);
+        assert!(inner.ts_ns + inner.dur_ns <= outer.ts_ns + outer.dur_ns);
+        assert_eq!(outer.args[0], ("round", ArgVal::U(3)));
+        assert_eq!(outer.args[1], ("mode", ArgVal::S("sim")));
+        assert!(outer.cat.contains("obs::span"));
+    }
+
+    #[test]
+    fn complete_at_preserves_exact_duration() {
+        let _g = crate::obs::test_guard();
+        crate::obs::enable_with_capacity(8);
+        drain();
+        let start = Instant::now();
+        let dur = Duration::from_nanos(1_234_567);
+        complete_at("exact_span", "test", start, dur, &[]);
+        let t = drain();
+        crate::obs::disable();
+        let e = t.events.iter().find(|e| e.name == "exact_span").expect("exact");
+        assert_eq!(e.dur_ns, 1_234_567);
+    }
+
+    #[test]
+    fn cross_thread_events_carry_thread_names() {
+        let _g = crate::obs::test_guard();
+        crate::obs::enable_with_capacity(4);
+        drain();
+        std::thread::Builder::new()
+            .name("obs-test-worker".into())
+            .spawn(|| {
+                let _s = crate::span!("thread_span");
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+        let t = drain();
+        crate::obs::disable();
+        let e = t.events.iter().find(|e| e.name == "thread_span").expect("span");
+        assert!(t
+            .threads
+            .iter()
+            .any(|(tid, name)| *tid == e.tid && name == "obs-test-worker"));
+    }
+}

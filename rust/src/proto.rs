@@ -64,6 +64,11 @@ pub enum Msg {
     Ack { code: u32 },
     /// Orderly shutdown.
     Bye,
+    /// Any peer -> edge: ask for a live metrics snapshot — the
+    /// `GET /metrics` equivalent on the control socket.
+    MetricsRequest,
+    /// Edge -> peer: Prometheus text exposition of the process metrics.
+    MetricsReply { text: String },
 }
 
 impl Msg {
@@ -81,6 +86,8 @@ impl Msg {
             Msg::Bye => 10,
             Msg::CheckpointBegin { .. } => 11,
             Msg::CheckpointChunk { .. } => 12,
+            Msg::MetricsRequest => 13,
+            Msg::MetricsReply { .. } => 14,
         }
     }
 
@@ -139,6 +146,8 @@ impl Msg {
                 put_u64(&mut b, data.len() as u64);
                 b.extend_from_slice(data);
             }
+            Msg::MetricsRequest => {}
+            Msg::MetricsReply { text } => put_str(&mut b, text),
         }
         b
     }
@@ -207,6 +216,10 @@ impl Msg {
                 data.copy_from_slice(&payload[start..start + n]);
                 Msg::CheckpointChunk { device, data }
             }
+            13 => Msg::MetricsRequest,
+            14 => Msg::MetricsReply {
+                text: r.string().map_err(perr)?,
+            },
             t => return Err(Error::Proto(format!("unknown tag {t}"))),
         };
         Ok(msg)
@@ -308,6 +321,10 @@ mod tests {
         roundtrip(Msg::CheckpointChunk {
             device: 4,
             data: Vec::new(),
+        });
+        roundtrip(Msg::MetricsRequest);
+        roundtrip(Msg::MetricsReply {
+            text: "# TYPE fedfly_rounds_total counter\nfedfly_rounds_total 5\n".into(),
         });
     }
 

@@ -111,7 +111,9 @@ impl PairTimeModel {
         let sync = self
             .net
             .model_sync_time(meta.total_params() * 4);
-        bt.total() * batches as f64 + sync
+        let t = bt.total() * batches as f64 + sync;
+        crate::obs::metric::wellknown::SIM_ROUND_US_TOTAL.add_seconds(t);
+        t
     }
 
     /// The pre-copy overlap window for a migration announced one round

@@ -42,6 +42,15 @@ impl Level {
 static MAX_LEVEL: OnceLock<Level> = OnceLock::new();
 static START: OnceLock<Instant> = OnceLock::new();
 
+/// Fix the log epoch and level at process start.  Without this the first
+/// `log()` call sets the epoch, so every earlier moment would render as
+/// `0.000s` and timestamps across threads would be skewed by whoever
+/// logged first.  Idempotent; `main()` calls it before anything else.
+pub fn init() {
+    let _ = START.set(Instant::now());
+    let _ = max_level();
+}
+
 pub fn max_level() -> Level {
     *MAX_LEVEL.get_or_init(|| {
         Level::parse(&std::env::var("FEDFLY_LOG").unwrap_or_default())
@@ -73,7 +82,16 @@ macro_rules! info {
 }
 
 #[macro_export]
-macro_rules! warn_ {
+macro_rules! error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+// A macro named `warn` coexists fine with the built-in `#[warn]`
+// attribute: attributes and bang-macros live in different call positions.
+#[macro_export]
+macro_rules! warn {
     ($($arg:tt)*) => {
         $crate::util::logging::log($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*))
     };
@@ -83,6 +101,13 @@ macro_rules! warn_ {
 macro_rules! debug {
     ($($arg:tt)*) => {
         $crate::util::logging::log($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Trace, module_path!(), format_args!($($arg)*))
     };
 }
 

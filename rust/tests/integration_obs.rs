@@ -1,0 +1,156 @@
+//! End-to-end observability: a traced SimOnly run must emit spans whose
+//! durations reconcile with `RunPerf`, export well-formed Chrome
+//! `trace_event` JSON / JSONL / Prometheus text, and bump the migration
+//! counters.  One combined test: the span sink and metric registry are
+//! process-global, so separate cases would race each other's drains.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use fedfly::config::{ExecMode, RunConfig};
+use fedfly::coordinator::Runner;
+use fedfly::manifest::Manifest;
+use fedfly::mobility::{MoveEvent, Schedule};
+use fedfly::model::ModelMeta;
+use fedfly::obs::{self, metric::wellknown as om, EventKind};
+
+/// Synthetic in-memory manifest (same shape as integration_parallel.rs):
+/// SimOnly never executes HLO, so no artifacts are needed on disk.
+fn sim_meta() -> ModelMeta {
+    let text = r#"{
+      "lr": 0.01, "momentum": 0.9, "num_classes": 10,
+      "image_shape": [32, 32, 3], "total_params": 1000,
+      "batch_variants": [16, 100],
+      "params": [
+        {"name": "conv_w", "shape": [10, 10], "offset": 0, "len": 100},
+        {"name": "conv_b", "shape": [100], "offset": 100, "len": 100},
+        {"name": "fc_w", "shape": [8, 100], "offset": 200, "len": 800}
+      ],
+      "blocks": [
+        {"name": "b0", "fwd_flops_per_image": 1000000.0},
+        {"name": "b1", "fwd_flops_per_image": 2000000.0}
+      ],
+      "splits": {
+        "2": {"device_params": 200, "server_params": 800,
+              "smashed_shape": [8, 8, 8],
+              "device_fwd_flops_per_image": 2000000.0,
+              "server_fwd_flops_per_image": 4000000.0}
+      },
+      "artifacts": {"device_fwd_sp2_b16": {
+          "file": "device_fwd_sp2_b16.hlo.txt", "phase": "device_fwd",
+          "sp": 2, "batch": 16, "inputs": [[200], [16, 32, 32, 3]],
+          "outputs": [[16, 8, 8, 8]]}}
+    }"#;
+    let m = Manifest::parse(text, PathBuf::from("/tmp")).unwrap();
+    ModelMeta::new(Arc::new(m))
+}
+
+#[test]
+fn trace_round_trips_and_reconciles() {
+    // Disabled (the default), spans must be inert: no events buffered.
+    {
+        let _g = fedfly::span!("should_not_record", round = 0u64);
+    }
+    obs::flush_thread();
+    assert!(
+        obs::drain().events.is_empty(),
+        "disabled tracer must record nothing"
+    );
+
+    let migrations_before = om::MIGRATIONS_TOTAL.get();
+    let wire_before = om::MIGRATION_WIRE_BYTES_TOTAL.get();
+
+    let mut cfg = RunConfig::paper_testbed();
+    cfg.exec = ExecMode::SimOnly;
+    cfg.rounds = 2;
+    cfg.train_samples = 2_000;
+    cfg.test_samples = 400;
+    cfg.eval_every = None;
+    cfg.schedule = Schedule::new(vec![MoveEvent {
+        round: 1,
+        device: 0,
+        to_edge: 1,
+    }]);
+    cfg.trace = true;
+    let report = Runner::new(cfg, sim_meta()).unwrap().run(None).unwrap();
+    obs::disable();
+
+    // ---- spans: the run's lifecycle is visible
+    let trace = obs::drain();
+    assert!(!trace.events.is_empty(), "traced run produced no events");
+    let names: Vec<&str> = trace.events.iter().map(|e| e.name).collect();
+    for expect in ["round", "worker", "migrate", "train"] {
+        assert!(names.contains(&expect), "missing {expect:?} span");
+    }
+
+    // ---- reconciliation: summed train-phase spans == RunPerf within 1%
+    let train_span_s: f64 = trace
+        .events
+        .iter()
+        .filter(|e| e.name == "train" && e.kind == EventKind::Complete)
+        .map(|e| e.dur_ns as f64 / 1e9)
+        .sum();
+    let perf_s = report.perf.train_wall_seconds;
+    assert!(
+        (train_span_s - perf_s).abs() <= perf_s.abs() * 0.01 + 1e-9,
+        "train spans {train_span_s}s vs perf {perf_s}s diverge > 1%"
+    );
+
+    // ---- Chrome trace export is well-formed trace_event JSON
+    let dir = std::env::temp_dir().join(format!("fedfly_obs_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace_path = dir.join("run.trace.json");
+    obs::export::write_chrome_trace(&trace_path, &trace).unwrap();
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let v = fedfly::json::parse(&text).unwrap();
+    assert_eq!(v.get_str("displayTimeUnit").unwrap(), "ms");
+    let events = v.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(events.len() >= trace.events.len(), "metadata + spans");
+    for e in events {
+        let ph = e.get_str("ph").unwrap();
+        assert!(
+            matches!(ph, "X" | "i" | "M"),
+            "unexpected phase {ph:?} in trace"
+        );
+        assert!(e.get("pid").is_ok() && e.get("tid").is_ok());
+        if ph == "X" {
+            assert!(e.get_f64("ts").unwrap() >= 0.0);
+            assert!(e.get_f64("dur").unwrap() >= 0.0);
+        }
+    }
+
+    // ---- JSONL: one parseable object per event
+    let jsonl_path = dir.join("run.jsonl");
+    obs::export::write_jsonl(&jsonl_path, &trace).unwrap();
+    let jsonl = std::fs::read_to_string(&jsonl_path).unwrap();
+    assert_eq!(jsonl.lines().count(), trace.events.len());
+    for line in jsonl.lines() {
+        fedfly::json::parse(line).unwrap();
+    }
+
+    // ---- metrics: the run moved a checkpoint and said so
+    assert!(
+        om::MIGRATIONS_TOTAL.get() > migrations_before,
+        "migration counter did not move"
+    );
+    assert!(
+        om::MIGRATION_WIRE_BYTES_TOTAL.get() > wire_before,
+        "wire-bytes counter did not move"
+    );
+    let prom = obs::export::prometheus_text();
+    for family in [
+        "fedfly_migrations_total",
+        "fedfly_migration_wire_bytes_total",
+        "fedfly_rounds_total",
+        "fedfly_encode_latency_us_bucket",
+    ] {
+        assert!(prom.contains(family), "prometheus text missing {family}");
+    }
+
+    // ---- report embeds the metrics dump
+    let rj = fedfly::json::to_string_pretty(&report.to_json());
+    let back = fedfly::json::parse(&rj).unwrap();
+    assert!(back.get("obs").is_ok(), "report JSON lacks obs section");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
