@@ -18,20 +18,23 @@ mod harness;
 use fedfly::config::{ExecMode, RunConfig};
 use fedfly::coordinator::Runner;
 use fedfly::experiments::load_meta;
+use fedfly::json;
 use fedfly::mobility::{MoveEvent, Schedule};
 use fedfly::tensor::weighted_average_split_into;
 use fedfly::timesim::profiles;
 use fedfly::util::Rng;
 
 fn main() {
-    reduction_scaling();
-    real_round_scaling();
+    let mut results = Vec::new();
+    reduction_scaling(&mut results);
+    let rounds = real_round_scaling();
+    harness::write_json("throughput", &results, vec![("rounds", rounds)]);
 }
 
 // ---------------------------------------------------------------------------
 // Section 1: FedAvg reduction scaling (artifact-free)
 
-fn reduction_scaling() {
+fn reduction_scaling(results: &mut Vec<harness::BenchResult>) {
     harness::header("parallel FedAvg reduction, 8 devices x 1M params");
     let n = 1_000_000usize;
     let nd = 123_457usize; // uneven device/server split straddles chunks
@@ -76,6 +79,7 @@ fn reduction_scaling() {
                 baseline / r.min_s
             );
         }
+        results.push(r);
     }
 }
 
@@ -100,17 +104,20 @@ fn throughput_cfg(workers: usize) -> RunConfig {
     cfg
 }
 
-fn real_round_scaling() {
+/// Returns the per-worker wall times as a JSON array for `write_json`
+/// (empty when artifacts are unavailable).
+fn real_round_scaling() -> json::Value {
     harness::header("Real-mode round throughput, 8 devices x 4 batches");
     let Ok(meta) = load_meta() else {
         println!("(artifacts missing -- run `make artifacts`; skipping Real-mode section)");
-        return;
+        return json::arr(Vec::new());
     };
     let Ok(engine) = fedfly::runtime::Engine::new(meta.manifest.clone()) else {
         println!("(PJRT engine unavailable; skipping Real-mode section)");
-        return;
+        return json::arr(Vec::new());
     };
 
+    let mut entries = Vec::new();
     let mut serial_wall = f64::NAN;
     let mut serial_bits: Vec<u32> = Vec::new();
     for &workers in &[1usize, 2, 4, 8] {
@@ -148,5 +155,15 @@ fn real_round_scaling() {
             "    barrier wait across workers: {imbalance:.3}s; fedavg {:.3}s",
             report.perf.aggregate_seconds
         );
+        entries.push(json::obj(vec![
+            ("workers", json::num(workers as f64)),
+            ("train_wall_s", json::num(wall)),
+            (
+                "speedup",
+                json::num(if workers == 1 { 1.0 } else { serial_wall / wall }),
+            ),
+            ("barrier_wait_s", json::num(imbalance)),
+        ]));
     }
+    json::arr(entries)
 }

@@ -1,0 +1,145 @@
+//! Host<->device transfer traffic of the split-training hot path
+//! (EXPERIMENTS.md §Perf L6).
+//!
+//! Two sections:
+//! 1. A/B of the bytes crossing the host/PJRT boundary over one local
+//!    epoch (SP2, batch 16, 4 batches): per-batch host-literal path vs
+//!    resident-buffer path, with a bit-identity check between the two and
+//!    the ">= 2x fewer bytes" acceptance assert.
+//! 2. Upload/download microbenches for the full parameter vector and
+//!    per-batch step timing in both modes.
+//!
+//! Emits `BENCH_transfer.json` (see `harness::write_json`).  Needs
+//! `make artifacts`; skips quietly — without writing the JSON — when they
+//! are missing.
+//!
+//! Run with: `cargo bench --bench bench_transfer`
+
+mod harness;
+
+use fedfly::data::SyntheticCifar;
+use fedfly::experiments::load_meta;
+use fedfly::json;
+use fedfly::runtime::Engine;
+use fedfly::split::{DeviceState, ServerState, SplitEngine};
+
+const SP: usize = 2;
+const BATCH: usize = 16;
+const BATCHES_PER_EPOCH: usize = 4;
+
+fn main() {
+    harness::header("host<->device transfer, SP2 batch-16 epoch (4 batches)");
+    let Ok(meta) = load_meta() else {
+        println!("(artifacts missing -- run `make artifacts`; skipping)");
+        return;
+    };
+    let Ok(engine) = Engine::new(meta.manifest.clone()) else {
+        println!("(PJRT engine unavailable; skipping)");
+        return;
+    };
+    let split = SplitEngine::new(&engine, meta.clone(), BATCH).unwrap();
+    split.warm_up(SP).unwrap();
+
+    let init = meta.init_params(7);
+    let ds = SyntheticCifar::new(3, BATCH * BATCHES_PER_EPOCH);
+    let batches: Vec<(Vec<f32>, Vec<i32>)> = (0..BATCHES_PER_EPOCH)
+        .map(|i| {
+            let idxs: Vec<usize> = (i * BATCH..(i + 1) * BATCH).collect();
+            ds.batch(&idxs)
+        })
+        .collect();
+
+    // Section 1a: host-literal path — every phase marshals both state
+    // halves through host vectors, every batch.
+    let mut dev_h = DeviceState::from_global(&meta, SP, &init).unwrap();
+    let mut srv_h = ServerState::from_global(&meta, SP, &init).unwrap();
+    let s0 = engine.stats();
+    for (x, y) in &batches {
+        split.train_batch(&mut dev_h, &mut srv_h, x, y).unwrap();
+    }
+    let host = engine.stats().since(&s0);
+
+    // Section 1b: resident path — one upload at epoch start, one
+    // download at the end; per batch only x/labels go up and the
+    // smashed-gradient's loss scalar comes down.
+    let mut dev_r = DeviceState::from_global(&meta, SP, &init).unwrap();
+    let mut srv_r = ServerState::from_global(&meta, SP, &init).unwrap();
+    let s1 = engine.stats();
+    let mut pair = split.upload_pair(&dev_r, &srv_r).unwrap();
+    for (x, y) in &batches {
+        split.train_batch_resident(&mut pair, x, y).unwrap();
+    }
+    split.finish_round(pair, &mut dev_r, &mut srv_r).unwrap();
+    let resident = engine.stats().since(&s1);
+
+    assert_eq!(dev_h, dev_r, "resident epoch must be bit-identical");
+    assert_eq!(srv_h, srv_r, "resident epoch must be bit-identical");
+
+    let reduction = host.transfer_bytes() as f64 / resident.transfer_bytes() as f64;
+    println!(
+        "transfer/epoch-host:     {:>12} bytes ({} h2d / {} d2h, {} crossings)",
+        host.transfer_bytes(),
+        host.h2d_bytes,
+        host.d2h_bytes,
+        host.h2d_transfers + host.d2h_transfers,
+    );
+    println!(
+        "transfer/epoch-resident: {:>12} bytes ({} h2d / {} d2h, {} crossings)",
+        resident.transfer_bytes(),
+        resident.h2d_bytes,
+        resident.d2h_bytes,
+        resident.h2d_transfers + resident.d2h_transfers,
+    );
+    println!("    -> reduction: {reduction:.2}x (acceptance: >= 2x)");
+    assert!(
+        reduction >= 2.0,
+        "resident path must cut transfer bytes >= 2x, got {reduction:.2}x"
+    );
+
+    // Section 2: marshalling microbenches.
+    harness::header("parameter-vector upload/download + per-batch step");
+    let n = init.len();
+    let mut results = Vec::new();
+    let buf = engine.upload_f32(&init, &[n]).unwrap();
+    results.push(harness::bench(
+        &format!("transfer/upload-params-{n}"),
+        3,
+        30,
+        || engine.upload_f32(&init, &[n]).unwrap(),
+    ));
+    results.push(harness::bench(
+        &format!("transfer/download-params-{n}"),
+        3,
+        30,
+        || engine.download_f32(&buf).unwrap(),
+    ));
+    let (x0, y0) = &batches[0];
+    results.push(harness::bench("transfer/train-batch-host", 2, 10, || {
+        split.train_batch(&mut dev_h, &mut srv_h, x0, y0).unwrap()
+    }));
+    let mut pair = split.upload_pair(&dev_r, &srv_r).unwrap();
+    results.push(harness::bench("transfer/train-batch-resident", 2, 10, || {
+        split.train_batch_resident(&mut pair, x0, y0).unwrap()
+    }));
+
+    harness::write_json(
+        "transfer",
+        &results,
+        vec![
+            ("epoch_batches", json::num(BATCHES_PER_EPOCH as f64)),
+            ("host_h2d_bytes", json::num(host.h2d_bytes as f64)),
+            ("host_d2h_bytes", json::num(host.d2h_bytes as f64)),
+            (
+                "host_transfer_bytes",
+                json::num(host.transfer_bytes() as f64),
+            ),
+            ("resident_h2d_bytes", json::num(resident.h2d_bytes as f64)),
+            ("resident_d2h_bytes", json::num(resident.d2h_bytes as f64)),
+            (
+                "resident_transfer_bytes",
+                json::num(resident.transfer_bytes() as f64),
+            ),
+            ("reduction_factor", json::num(reduction)),
+        ],
+    );
+}

@@ -8,6 +8,8 @@
 
 use std::time::Instant;
 
+use fedfly::json::{self, Value};
+
 pub struct BenchResult {
     pub name: String,
     pub iters: usize,
@@ -54,4 +56,34 @@ pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> 
 
 pub fn header(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// One result as a JSON object (times in seconds).
+pub fn result_json(r: &BenchResult) -> Value {
+    json::obj(vec![
+        ("name", json::s(r.name.as_str())),
+        ("iters", json::num(r.iters as f64)),
+        ("mean_s", json::num(r.mean_s)),
+        ("std_s", json::num(r.std_s)),
+        ("min_s", json::num(r.min_s)),
+    ])
+}
+
+/// Write `BENCH_<bench>.json` in the working directory: a machine-readable
+/// record of the run for CI trend tracking.  `extra` carries bench-specific
+/// scalars (speedups, byte counts, ...) alongside the timing results.
+pub fn write_json(bench: &str, results: &[BenchResult], extra: Vec<(&str, Value)>) {
+    let mut fields: Vec<(&str, Value)> = vec![
+        ("bench", json::s(bench)),
+        (
+            "results",
+            json::arr(results.iter().map(result_json).collect()),
+        ),
+    ];
+    fields.extend(extra);
+    let path = format!("BENCH_{bench}.json");
+    match std::fs::write(&path, json::to_string_pretty(&json::obj(fields))) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("(could not write {path}: {e})"),
+    }
 }

@@ -73,6 +73,12 @@ pub struct RunConfig {
     /// relaxed atomic load per span site and records nothing, keeping
     /// determinism surfaces bit-exact.
     pub trace: bool,
+    /// Keep per-device training state resident in PJRT buffers across
+    /// the batches of a local epoch, syncing to host vectors only at
+    /// round boundaries, checkpoints and eval (EXPERIMENTS.md §Perf L6).
+    /// Results are bit-identical either way; `--no-resident` selects the
+    /// per-batch host-literal reference path for A/B runs.
+    pub resident_buffers: bool,
 }
 
 impl RunConfig {
@@ -102,6 +108,7 @@ impl RunConfig {
             delta_migration: true,
             overlap_migration: true,
             trace: false,
+            resident_buffers: true,
         }
     }
 
@@ -222,6 +229,7 @@ impl RunConfig {
             ("delta_migration", Value::Bool(self.delta_migration)),
             ("overlap_migration", Value::Bool(self.overlap_migration)),
             ("trace", Value::Bool(self.trace)),
+            ("resident_buffers", Value::Bool(self.resident_buffers)),
             (
                 "moves",
                 json::arr(
@@ -299,5 +307,6 @@ mod tests {
         assert_eq!(v.get_str("strategy").unwrap(), "fedfly");
         assert_eq!(v.get("delta_migration").unwrap().as_bool(), Some(true));
         assert_eq!(v.get("overlap_migration").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("resident_buffers").unwrap().as_bool(), Some(true));
     }
 }

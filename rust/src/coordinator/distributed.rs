@@ -46,7 +46,7 @@ use crate::migration::{StreamAssembler, Strategy};
 use crate::model::ModelMeta;
 use crate::obs::metric::wellknown as om;
 use crate::proto::{read_msg, write_msg, Msg};
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{DeviceBuffer, Engine, HostTensor};
 use crate::split::{DeviceState, ServerState};
 use crate::util::Rng;
 
@@ -176,6 +176,7 @@ impl EdgeHandle {
 
 /// Start an edge server on `listener`, connected to `central_addr`.
 /// `peers[i]` must be edge i's listener address (including our own).
+#[allow(clippy::too_many_arguments)]
 pub fn start_edge(
     listener: TcpListener,
     edge_id: u64,
@@ -184,6 +185,7 @@ pub fn start_edge(
     manifest: Arc<Manifest>,
     sp: usize,
     batch: usize,
+    resident: bool,
 ) -> Result<EdgeHandle> {
     let addr = listener.local_addr()?;
     let mut central = TcpStream::connect(central_addr)?;
@@ -225,7 +227,9 @@ pub fn start_edge(
         std::thread::Builder::new()
             .name(format!("edge-{edge_id}"))
             .spawn(move || {
-                if let Err(e) = edge_worker(work_rx, central, peers, manifest, meta, sp, batch) {
+                if let Err(e) =
+                    edge_worker(work_rx, central, peers, manifest, meta, sp, batch, resident)
+                {
                     crate::error!("edge worker failed: {e}");
                 }
             })
@@ -262,6 +266,7 @@ pub fn start_edge(
 
 /// The edge worker: single thread owning the Engine, the per-device
 /// server states, the migrated-checkpoint inbox and the central uplink.
+#[allow(clippy::too_many_arguments)]
 fn edge_worker(
     work_rx: mpsc::Receiver<Work>,
     mut central: TcpStream,
@@ -270,10 +275,22 @@ fn edge_worker(
     meta: ModelMeta,
     sp: usize,
     batch: usize,
+    resident: bool,
 ) -> Result<()> {
     let engine = Engine::new(manifest)?;
     let dev_n = meta.device_params(sp)?;
+    let plan = StepPlan {
+        sp,
+        batch,
+        name: meta.server_step_name(sp, batch),
+        smash_shape: {
+            let s = &meta.manifest.split(sp)?.smashed_shape;
+            vec![batch, s[0], s[1], s[2]]
+        },
+        resident,
+    };
     let mut states: HashMap<u64, ServerState> = HashMap::new();
+    let mut residents: HashMap<u64, ResidentSrv> = HashMap::new();
     let mut inbox: HashMap<u64, Checkpoint> = HashMap::new();
     let mut global: Option<(u64, Vec<f32>)> = None;
     let mut pending_resumes: Vec<(u64, mpsc::Sender<Msg>)> = Vec::new();
@@ -346,8 +363,8 @@ fn edge_worker(
                         om::PARKED_BATCHES.add(1);
                     } else {
                         let out = edge_server_step(
-                            &engine, &meta, sp, batch, &mut states, &mut inbox, &global,
-                            device, &data, &labels,
+                            &engine, &meta, &plan, &mut states, &mut residents, &mut inbox,
+                            &global, device, &data, &labels,
                         )?;
                         let _ = reply.send(out);
                     }
@@ -357,6 +374,9 @@ fn edge_worker(
                     weight,
                     params: dev_params,
                 } => {
+                    // The host copy goes stale while training runs on the
+                    // resident mirror; sync before aggregation reads it.
+                    materialize_server(&engine, &residents, &mut states, device)?;
                     let srv = states.get(&device).ok_or_else(|| {
                         Error::Proto(format!("update from unknown device {device}"))
                     })?;
@@ -378,6 +398,8 @@ fn edge_worker(
                     // stream the bytes in the background so the transfer
                     // overlaps the device's reconnect + first batches.
                     let _span = crate::span!("migrate_out", device = device, dest = dest_edge);
+                    materialize_server(&engine, &residents, &mut states, device)?;
+                    residents.remove(&device);
                     let code = match states.remove(&device) {
                         Some(srv) => {
                             let dest = *peers.get(dest_edge as usize).ok_or_else(|| {
@@ -503,8 +525,8 @@ fn edge_worker(
                 let p = parked.remove(i);
                 om::PARKED_BATCHES.add(-1);
                 let out = edge_server_step(
-                    &engine, &meta, sp, batch, &mut states, &mut inbox, &global, p.device,
-                    &p.data, &p.labels,
+                    &engine, &meta, &plan, &mut states, &mut residents, &mut inbox, &global,
+                    p.device, &p.data, &p.labels,
                 )?;
                 let _ = p.reply.send(out);
             } else {
@@ -677,14 +699,53 @@ fn stream_chunks(peer: &mut TcpStream, device: u64, blob: &[u8]) -> Result<u32> 
     Err(Error::Proto("empty checkpoint stream".into()))
 }
 
+/// Per-edge cached execution plan for `server_step`: the artifact name and
+/// smashed-tensor shape are fixed for the whole run, so they are computed
+/// once at worker start instead of re-derived per batch.
+struct StepPlan {
+    sp: usize,
+    batch: usize,
+    name: String,
+    smash_shape: Vec<usize>,
+    /// Keep each device's server half resident between batches (§Perf L6).
+    resident: bool,
+}
+
+/// Device-resident mirror of a `ServerState`'s params/momentum
+/// (EXPERIMENTS.md §Perf L6).  The smashed gradient still crosses the host
+/// boundary every batch — the wire protocol carries it as `Vec<f32>` — so
+/// only the two large state vectors stay resident.
+struct ResidentSrv {
+    params: DeviceBuffer,
+    momentum: DeviceBuffer,
+}
+
+/// Sync a device's resident server half back into its host `ServerState`.
+/// The host copy goes stale while training runs on the mirror; aggregation
+/// and checkpointing read the host copy, so they call this first.  The
+/// mirror stays live — training continues on it.  No-op when the device
+/// has no mirror (host path, or never trained here).
+fn materialize_server(
+    engine: &Engine,
+    residents: &HashMap<u64, ResidentSrv>,
+    states: &mut HashMap<u64, ServerState>,
+    device: u64,
+) -> Result<()> {
+    if let (Some(r), Some(st)) = (residents.get(&device), states.get_mut(&device)) {
+        st.params = engine.download_f32(&r.params)?;
+        st.momentum = engine.download_f32(&r.momentum)?;
+    }
+    Ok(())
+}
+
 /// Execute the edge-side training step for one smashed batch.
 #[allow(clippy::too_many_arguments)]
 fn edge_server_step(
     engine: &Engine,
     meta: &ModelMeta,
-    sp: usize,
-    batch: usize,
+    plan: &StepPlan,
     states: &mut HashMap<u64, ServerState>,
+    residents: &mut HashMap<u64, ResidentSrv>,
     inbox: &mut HashMap<u64, Checkpoint>,
     global: &Option<(u64, Vec<f32>)>,
     device: u64,
@@ -697,7 +758,7 @@ fn edge_server_step(
     if !states.contains_key(&device) {
         let state = if let Some(ck) = inbox.remove(&device) {
             ServerState {
-                sp,
+                sp: plan.sp,
                 params: ck.server_params,
                 momentum: ck.server_momentum,
                 last_grad_smashed: ck.grad_smashed,
@@ -708,30 +769,54 @@ fn edge_server_step(
             let (_, params) = global
                 .as_ref()
                 .ok_or_else(|| Error::Proto("no global params yet".into()))?;
-            ServerState::from_global(meta, sp, params)?
+            ServerState::from_global(meta, plan.sp, params)?
         };
+        // A fresh host state supersedes any mirror left from a previous
+        // tenure of this device on this edge.
+        residents.remove(&device);
         states.insert(device, state);
     }
-    let smash_shape = {
-        let s = &meta.manifest.split(sp)?.smashed_shape;
-        vec![batch, s[0], s[1], s[2]]
-    };
     let labels: Vec<i32> = labels_f.iter().map(|&x| x as i32).collect();
-    let name = meta.server_step_name(sp, batch);
+    let (grad, loss) = if plan.resident {
+        // §Perf L6: train on the resident mirror; only the gradient and
+        // loss come back to the host (the wire needs both every batch).
+        if !residents.contains_key(&device) {
+            let st = &states[&device];
+            residents.insert(
+                device,
+                ResidentSrv {
+                    params: engine.upload_f32(&st.params, &[st.params.len()])?,
+                    momentum: engine.upload_f32(&st.momentum, &[st.momentum.len()])?,
+                },
+            );
+        }
+        let x = engine.upload_f32(smashed, &plan.smash_shape)?;
+        let y = engine.upload_i32(&labels, &[plan.batch])?;
+        let r = residents.get_mut(&device).unwrap();
+        let mut out = engine.execute_resident(&plan.name, &[&r.params, &r.momentum, &x, &y])?;
+        let loss = engine.download_f32(&out.pop().unwrap())?[0];
+        let grad = engine.download_f32(&out.pop().unwrap())?;
+        r.momentum = out.pop().unwrap();
+        r.params = out.pop().unwrap();
+        (grad, loss)
+    } else {
+        let st = states.get_mut(&device).unwrap();
+        let mut out = engine.execute(
+            &plan.name,
+            &[
+                HostTensor::f32(&st.params, vec![st.params.len()]),
+                HostTensor::f32(&st.momentum, vec![st.momentum.len()]),
+                HostTensor::f32(smashed, plan.smash_shape.clone()),
+                HostTensor::i32(&labels, vec![plan.batch]),
+            ],
+        )?;
+        let loss = out.pop().unwrap()[0];
+        let grad = out.pop().unwrap();
+        st.momentum = out.pop().unwrap();
+        st.params = out.pop().unwrap();
+        (grad, loss)
+    };
     let st = states.get_mut(&device).unwrap();
-    let mut out = engine.execute(
-        &name,
-        &[
-            HostTensor::f32(&st.params, vec![st.params.len()]),
-            HostTensor::f32(&st.momentum, vec![st.momentum.len()]),
-            HostTensor::f32(smashed, smash_shape),
-            HostTensor::i32(&labels, vec![batch]),
-        ],
-    )?;
-    let loss = out.pop().unwrap()[0];
-    let grad = out.pop().unwrap();
-    st.momentum = out.pop().unwrap();
-    st.params = out.pop().unwrap();
     st.last_grad_smashed = grad.clone();
     st.last_loss = loss;
     st.batches_done += 1;
@@ -840,6 +925,9 @@ pub struct DeviceConfig {
     pub data_seed: u64,
     pub train_samples: usize,
     pub rng_seed: u64,
+    /// Keep the device half resident in PJRT buffers across each local
+    /// epoch (EXPERIMENTS.md §Perf L6); bit-identical either way.
+    pub resident: bool,
 }
 
 /// Per-run device result.
@@ -886,6 +974,14 @@ pub fn run_device(
     let mut migrations = 0usize;
     let mut migration_seconds = 0.0f64;
 
+    // Phase names and the smashed shape are fixed for the run; derive once.
+    let fwd = meta.device_fwd_name(cfg.sp, cfg.batch);
+    let bwd = meta.device_bwd_name(cfg.sp, cfg.batch);
+    let smash_shape = {
+        let s = &meta.manifest.split(cfg.sp)?.smashed_shape;
+        vec![cfg.batch, s[0], s[1], s[2]]
+    };
+
     for round in 0..cfg.rounds {
         let _span = crate::span!("device_round", device = cfg.id, round = round);
         // Mobility at the round boundary (paper Step 6').
@@ -931,24 +1027,38 @@ pub fn run_device(
         }
         let dev_state = dev.as_mut().unwrap();
 
-        // One local epoch (paper Steps 2/3).
-        let smash_shape = {
-            let s = &meta.manifest.split(cfg.sp)?.smashed_shape;
-            vec![cfg.batch, s[0], s[1], s[2]]
-        };
+        // One local epoch (paper Steps 2/3).  With resident buffers the
+        // device half lives in PJRT buffers for the whole epoch (§Perf
+        // L6); the wire still carries the smashed activation/gradient as
+        // host vectors either way.
+        let mut res_params = None;
+        let mut res_momentum = None;
+        if cfg.resident {
+            res_params =
+                Some(engine.upload_f32(&dev_state.params, &[dev_state.params.len()])?);
+            res_momentum =
+                Some(engine.upload_f32(&dev_state.momentum, &[dev_state.momentum.len()])?);
+        }
         for idxs in BatchIter::new(&shard, cfg.batch, &mut rng) {
             let (x, y) = ds.batch(&idxs);
-            let fwd = meta.device_fwd_name(cfg.sp, cfg.batch);
-            let smashed = engine
-                .execute(
-                    &fwd,
-                    &[
-                        HostTensor::f32(&dev_state.params, vec![dev_state.params.len()]),
-                        HostTensor::f32(&x, vec![cfg.batch, 32, 32, 3]),
-                    ],
-                )?
-                .pop()
-                .unwrap();
+            let mut x_res = None;
+            let smashed = if let Some(p) = res_params.as_ref() {
+                let xr = engine.upload_f32(&x, &[cfg.batch, 32, 32, 3])?;
+                let s = engine.execute_resident(&fwd, &[p, &xr])?.pop().unwrap();
+                x_res = Some(xr);
+                engine.download_f32(&s)?
+            } else {
+                engine
+                    .execute(
+                        &fwd,
+                        &[
+                            HostTensor::f32(&dev_state.params, vec![dev_state.params.len()]),
+                            HostTensor::f32(&x, vec![cfg.batch, 32, 32, 3]),
+                        ],
+                    )?
+                    .pop()
+                    .unwrap()
+            };
             write_msg(
                 &mut conn,
                 &Msg::Smashed {
@@ -961,21 +1071,34 @@ pub fn run_device(
                 Msg::SmashedGrad { data, loss, .. } => (data, loss),
                 other => return Err(Error::Proto(format!("expected grad, got {other:?}"))),
             };
-            let bwd = meta.device_bwd_name(cfg.sp, cfg.batch);
-            let mut out = engine.execute(
-                &bwd,
-                &[
-                    HostTensor::f32(&dev_state.params, vec![dev_state.params.len()]),
-                    HostTensor::f32(&dev_state.momentum, vec![dev_state.momentum.len()]),
-                    HostTensor::f32(&x, vec![cfg.batch, 32, 32, 3]),
-                    HostTensor::f32(&grad, smash_shape.clone()),
-                ],
-            )?;
-            dev_state.momentum = out.pop().unwrap();
-            dev_state.params = out.pop().unwrap();
+            if let (Some(p), Some(m), Some(xr)) =
+                (res_params.take(), res_momentum.take(), x_res.take())
+            {
+                let gr = engine.upload_f32(&grad, &smash_shape)?;
+                let mut out = engine.execute_resident(&bwd, &[&p, &m, &xr, &gr])?;
+                res_momentum = Some(out.pop().unwrap());
+                res_params = Some(out.pop().unwrap());
+            } else {
+                let mut out = engine.execute(
+                    &bwd,
+                    &[
+                        HostTensor::f32(&dev_state.params, vec![dev_state.params.len()]),
+                        HostTensor::f32(&dev_state.momentum, vec![dev_state.momentum.len()]),
+                        HostTensor::f32(&x, vec![cfg.batch, 32, 32, 3]),
+                        HostTensor::f32(&grad, smash_shape.clone()),
+                    ],
+                )?;
+                dev_state.momentum = out.pop().unwrap();
+                dev_state.params = out.pop().unwrap();
+            }
             loss_sum += loss as f64;
             last_loss = loss;
             batches += 1;
+        }
+        // Sync the resident half back before it feeds aggregation (Step 4).
+        if let (Some(p), Some(m)) = (res_params.take(), res_momentum.take()) {
+            dev_state.params = engine.download_f32(&p)?;
+            dev_state.momentum = engine.download_f32(&m)?;
         }
 
         // Send the device half upstream (paper Step 4).
@@ -1059,6 +1182,7 @@ pub fn run_in_threads(cfg: &RunConfig, manifest: Arc<Manifest>) -> Result<Distri
             manifest.clone(),
             cfg.sp,
             cfg.batch,
+            cfg.resident_buffers,
         )?);
     }
 
@@ -1085,6 +1209,7 @@ pub fn run_in_threads(cfg: &RunConfig, manifest: Arc<Manifest>) -> Result<Distri
             data_seed: cfg.seed,
             train_samples: cfg.train_samples,
             rng_seed: root_rng.fork(d as u64).state()[0],
+            resident: cfg.resident_buffers,
         };
         let manifest = manifest.clone();
         device_threads.push(std::thread::spawn(move || run_device(dcfg, manifest)));

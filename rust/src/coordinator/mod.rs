@@ -124,6 +124,7 @@ impl Runner {
                 meta,
                 cfg.sp,
                 cfg.batch,
+                cfg.resident_buffers,
                 &train,
                 &test,
             )?)
@@ -380,13 +381,35 @@ impl Runner {
                     let mut batches = 0usize;
                     if let Some(se) = &split_engine {
                         let iter = BatchIter::new(&ctx.shard, cfg.batch, &mut ctx.rng);
-                        for idxs in iter {
-                            let (x, y) = train.batch(&idxs);
-                            let t0 = std::time::Instant::now();
-                            let out = se.train_batch(&mut ctx.dev, &mut ctx.srv, &x, &y)?;
-                            host_seconds += t0.elapsed().as_secs_f64();
-                            loss_acc += out.loss as f64;
-                            batches += 1;
+                        if cfg.resident_buffers {
+                            // §Perf L6: the state stays resident across the
+                            // epoch's batches — one upload before, one
+                            // download after (FedAvg and migration need the
+                            // host vectors) instead of per-batch round trips.
+                            let t_up = std::time::Instant::now();
+                            let mut pair = se.upload_pair(&ctx.dev, &ctx.srv)?;
+                            host_seconds += t_up.elapsed().as_secs_f64();
+                            for idxs in iter {
+                                let (x, y) = train.batch(&idxs);
+                                let t0 = std::time::Instant::now();
+                                let out = se.train_batch_resident(&mut pair, &x, &y)?;
+                                host_seconds += t0.elapsed().as_secs_f64();
+                                loss_acc += out.loss as f64;
+                                batches += 1;
+                            }
+                            let t_down = std::time::Instant::now();
+                            se.finish_round(pair, &mut ctx.dev, &mut ctx.srv)?;
+                            host_seconds += t_down.elapsed().as_secs_f64();
+                        } else {
+                            for idxs in iter {
+                                let (x, y) = train.batch(&idxs);
+                                let t0 = std::time::Instant::now();
+                                let out =
+                                    se.train_batch(&mut ctx.dev, &mut ctx.srv, &x, &y)?;
+                                host_seconds += t0.elapsed().as_secs_f64();
+                                loss_acc += out.loss as f64;
+                                batches += 1;
+                            }
                         }
                     } else {
                         // SimOnly: no data is touched, so skip the O(shard)
@@ -531,6 +554,9 @@ impl Runner {
             let d = e.stats().since(s0);
             perf.workers_perf[0].engine_executions = d.executions;
             perf.workers_perf[0].engine_exec_seconds = d.exec_seconds;
+            perf.workers_perf[0].engine_h2d_bytes = d.h2d_bytes;
+            perf.workers_perf[0].engine_d2h_bytes = d.d2h_bytes;
+            perf.workers_perf[0].engine_sync_seconds = d.sync_seconds;
         }
         report.perf = perf;
         report.final_params = global.params;
@@ -552,8 +578,12 @@ pub fn evaluate(
     let classes = se.meta().manifest.num_classes;
     let mut correct_weighted = 0.0f64;
     let mut total = 0usize;
+    // One index buffer for the whole eval, rewritten in place per batch.
+    let mut idxs: Vec<usize> = (0..batch).collect();
     for start in (0..n).step_by(batch) {
-        let idxs: Vec<usize> = (start..start + batch).collect();
+        for (slot, i) in idxs.iter_mut().zip(start..start + batch) {
+            *slot = i;
+        }
         let (x, y) = test.batch(&idxs);
         let logits = se.eval_logits(params, &x)?;
         correct_weighted += accuracy_from_logits(&logits, &y, classes) * batch as f64;

@@ -92,6 +92,9 @@ enum Reply {
         worker: usize,
         engine_executions: u64,
         engine_exec_seconds: f64,
+        engine_h2d_bytes: u64,
+        engine_d2h_bytes: u64,
+        engine_sync_seconds: f64,
     },
 }
 
@@ -103,6 +106,8 @@ struct WorkerCfg {
     meta: ModelMeta,
     sp: usize,
     batch: usize,
+    /// Train on device-resident state (EXPERIMENTS.md §Perf L6).
+    resident: bool,
     train: SyntheticCifar,
     test: SyntheticCifar,
 }
@@ -124,12 +129,14 @@ impl WorkerPool {
     /// Spawn `workers` threads and block until every one has built (and
     /// in Real mode warmed up) its private engine, so compile time never
     /// pollutes the timed rounds.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn start(
         workers: usize,
         manifest: Option<Arc<Manifest>>,
         meta: &ModelMeta,
         sp: usize,
         batch: usize,
+        resident: bool,
         train: &SyntheticCifar,
         test: &SyntheticCifar,
     ) -> Result<WorkerPool> {
@@ -144,6 +151,7 @@ impl WorkerPool {
                 meta: meta.clone(),
                 sp,
                 batch,
+                resident,
                 train: train.clone(),
                 test: test.clone(),
             };
@@ -326,9 +334,15 @@ impl WorkerPool {
                     worker,
                     engine_executions,
                     engine_exec_seconds,
+                    engine_h2d_bytes,
+                    engine_d2h_bytes,
+                    engine_sync_seconds,
                 }) => {
                     perf[worker].engine_executions = engine_executions;
                     perf[worker].engine_exec_seconds = engine_exec_seconds;
+                    perf[worker].engine_h2d_bytes = engine_h2d_bytes;
+                    perf[worker].engine_d2h_bytes = engine_d2h_bytes;
+                    perf[worker].engine_sync_seconds = engine_sync_seconds;
                     got += 1;
                 }
                 // Stale round replies from an aborted run: ignore.
@@ -452,17 +466,14 @@ fn worker_main(wcfg: WorkerCfg, jobs: Receiver<Job>, replies: Sender<Reply>) {
         }
     }
 
-    let (engine_executions, engine_exec_seconds) = engine
-        .as_ref()
-        .map(|e| {
-            let s = e.stats();
-            (s.executions, s.exec_seconds)
-        })
-        .unwrap_or((0, 0.0));
+    let stats = engine.as_ref().map(|e| e.stats()).unwrap_or_default();
     let _ = replies.send(Reply::Stats {
         worker: wcfg.worker,
-        engine_executions,
-        engine_exec_seconds,
+        engine_executions: stats.executions,
+        engine_exec_seconds: stats.exec_seconds,
+        engine_h2d_bytes: stats.h2d_bytes,
+        engine_d2h_bytes: stats.d2h_bytes,
+        engine_sync_seconds: stats.sync_seconds,
     });
 }
 
@@ -480,13 +491,32 @@ fn run_train(
     let mut batches = 0usize;
     if let Some(se) = se {
         let iter = BatchIter::new(&ctx.shard, wcfg.batch, &mut ctx.rng);
-        for idxs in iter {
-            let (x, y) = wcfg.train.batch(&idxs);
-            let t0 = Instant::now();
-            let out = se.train_batch(&mut ctx.dev, &mut ctx.srv, &x, &y)?;
-            host_seconds += t0.elapsed().as_secs_f64();
-            loss_acc += out.loss as f64;
-            batches += 1;
+        if wcfg.resident {
+            // §Perf L6: mirror the serial resident branch exactly — one
+            // upload before the epoch, one materialize after.
+            let t_up = Instant::now();
+            let mut pair = se.upload_pair(&ctx.dev, &ctx.srv)?;
+            host_seconds += t_up.elapsed().as_secs_f64();
+            for idxs in iter {
+                let (x, y) = wcfg.train.batch(&idxs);
+                let t0 = Instant::now();
+                let out = se.train_batch_resident(&mut pair, &x, &y)?;
+                host_seconds += t0.elapsed().as_secs_f64();
+                loss_acc += out.loss as f64;
+                batches += 1;
+            }
+            let t_down = Instant::now();
+            se.finish_round(pair, &mut ctx.dev, &mut ctx.srv)?;
+            host_seconds += t_down.elapsed().as_secs_f64();
+        } else {
+            for idxs in iter {
+                let (x, y) = wcfg.train.batch(&idxs);
+                let t0 = Instant::now();
+                let out = se.train_batch(&mut ctx.dev, &mut ctx.srv, &x, &y)?;
+                host_seconds += t0.elapsed().as_secs_f64();
+                loss_acc += out.loss as f64;
+                batches += 1;
+            }
         }
     } else {
         // SimOnly: mirror the serial path — batch *count* only, RNG
@@ -515,8 +545,12 @@ fn run_eval(
 ) -> Result<Vec<(usize, f64)>> {
     let classes = se.meta().manifest.num_classes;
     let mut out = Vec::with_capacity(starts.len());
+    // One index buffer for this worker's share, rewritten per batch.
+    let mut idxs: Vec<usize> = (0..wcfg.batch).collect();
     for &start in starts {
-        let idxs: Vec<usize> = (start..start + wcfg.batch).collect();
+        for (slot, i) in idxs.iter_mut().zip(start..start + wcfg.batch) {
+            *slot = i;
+        }
         let (x, y) = wcfg.test.batch(&idxs);
         let logits = se.eval_logits(params, &x)?;
         out.push((

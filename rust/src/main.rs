@@ -24,7 +24,7 @@ fn usage() -> ! {
            info                         manifest / artifact summary\n\
            train [--rounds N] [--sp K] [--batch B] [--strategy fedfly|restart]\n\
                  [--move-at FRAC] [--samples N] [--sim] [--seed S] [--workers W]\n\
-                 [--full-migration] [--no-overlap]\n\
+                 [--full-migration] [--no-overlap] [--no-resident]\n\
                  [--trace-out PATH] [--no-trace]   Chrome trace + JSONL + metrics dump\n\
            fig3a | fig3b | fig3c        paper timing figures (simulated testbed)\n\
            fig4 [--frac F] [--rounds N] paper accuracy figure (real training)\n\
@@ -170,6 +170,7 @@ fn edge_cmd(args: &Args) -> fedfly::Result<()> {
         meta.manifest.clone(),
         args.get("sp", 2usize),
         args.get("batch", 16usize),
+        !args.has("no-resident"),
     )?;
     // Serve until killed.
     fedfly::info!("edge {id}: serving (ctrl-c to stop)");
@@ -223,6 +224,7 @@ fn device_cmd(args: &Args) -> fedfly::Result<()> {
         data_seed: seed,
         train_samples,
         rng_seed,
+        resident: !args.has("no-resident"),
     };
     let stats = fedfly::coordinator::distributed::run_device(cfg, meta.manifest.clone())?;
     println!(
@@ -275,6 +277,9 @@ fn train(args: &Args) -> fedfly::Result<()> {
     }
     if args.has("no-overlap") {
         cfg.overlap_migration = false;
+    }
+    if args.has("no-resident") {
+        cfg.resident_buffers = false;
     }
     let trace_out: String = args.get("trace-out", String::new());
     if !trace_out.is_empty() && !args.has("no-trace") {

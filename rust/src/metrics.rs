@@ -71,6 +71,13 @@ pub struct WorkerPerf {
     pub engine_executions: u64,
     /// Host seconds inside PJRT for those executions.
     pub engine_exec_seconds: f64,
+    /// Bytes this worker's engine uploaded across the host/device
+    /// boundary (EXPERIMENTS.md §Perf L6).
+    pub engine_h2d_bytes: u64,
+    /// Bytes downloaded back to the host.
+    pub engine_d2h_bytes: u64,
+    /// Host seconds spent marshalling those bytes.
+    pub engine_sync_seconds: f64,
 }
 
 /// Wall-clock accounting for one run, split by pipeline stage.
@@ -390,6 +397,18 @@ impl RunReport {
                                         (
                                             "engine_exec_seconds",
                                             json::num(w.engine_exec_seconds),
+                                        ),
+                                        (
+                                            "engine_h2d_bytes",
+                                            json::num(w.engine_h2d_bytes as f64),
+                                        ),
+                                        (
+                                            "engine_d2h_bytes",
+                                            json::num(w.engine_d2h_bytes as f64),
+                                        ),
+                                        (
+                                            "engine_sync_seconds",
+                                            json::num(w.engine_sync_seconds),
                                         ),
                                     ])
                                 })

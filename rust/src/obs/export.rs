@@ -163,10 +163,15 @@ pub fn snapshot() -> Vec<MetricSnapshot> {
             &w::SIM_MIGRATION_HIDDEN_US_TOTAL,
         ),
         c("fedfly_sim_round_us_total", &w::SIM_ROUND_US_TOTAL),
+        c("fedfly_h2d_transfers_total", &w::H2D_TRANSFERS_TOTAL),
+        c("fedfly_h2d_bytes_total", &w::H2D_BYTES_TOTAL),
+        c("fedfly_d2h_transfers_total", &w::D2H_TRANSFERS_TOTAL),
+        c("fedfly_d2h_bytes_total", &w::D2H_BYTES_TOTAL),
         g("fedfly_parked_batches", &w::PARKED_BATCHES),
         g("fedfly_mailbox_depth", &w::MAILBOX_DEPTH),
         h("fedfly_encode_latency_us", &w::ENCODE_LATENCY_US),
         h("fedfly_decode_latency_us", &w::DECODE_LATENCY_US),
+        h("fedfly_sync_latency_us", &w::SYNC_LATENCY_US),
     ];
     for (code, m) in w::ACKS_BY_CODE.iter().enumerate() {
         out.push(c(&format!("fedfly_acks_total{{code=\"{code}\"}}"), m));

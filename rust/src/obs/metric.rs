@@ -221,6 +221,16 @@ pub mod wellknown {
     pub static SIM_MIGRATION_HIDDEN_US_TOTAL: Counter = Counter::new();
     /// Simulated device round seconds accounted by `timesim`, as µs.
     pub static SIM_ROUND_US_TOTAL: Counter = Counter::new();
+    /// Host->device crossings of the PJRT literal boundary and their
+    /// bytes (EXPERIMENTS.md §Perf L6); counted for both the host-literal
+    /// and resident execution paths.
+    pub static H2D_TRANSFERS_TOTAL: Counter = Counter::new();
+    pub static H2D_BYTES_TOTAL: Counter = Counter::new();
+    /// Device->host crossings and their bytes.
+    pub static D2H_TRANSFERS_TOTAL: Counter = Counter::new();
+    pub static D2H_BYTES_TOTAL: Counter = Counter::new();
+    /// Latency of individual host<->device marshalling operations.
+    pub static SYNC_LATENCY_US: Histogram = Histogram::new();
 
     /// Count a protocol ack by code (codes ≥ 9 share the last slot).
     pub fn ack(code: u32) {

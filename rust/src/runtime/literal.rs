@@ -61,6 +61,67 @@ pub fn literal_to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
 }
 
+/// An owned tensor resident on the PJRT side of the host boundary
+/// (EXPERIMENTS.md §Perf L6).
+///
+/// On the CPU PJRT client "device memory" *is* host memory, so residency
+/// lives at the literal layer: the wrapped literal is exactly what an
+/// executable consumes, and keeping it alive across batches removes the
+/// per-batch host-`Vec` -> literal allocation + copy on the way in and
+/// the literal -> `Vec` copy on the way out.  The host only sees the
+/// bytes again through [`Engine::download_f32`](super::Engine::download_f32);
+/// create buffers through [`Engine::upload_f32`](super::Engine::upload_f32)
+/// / [`Engine::upload_i32`](super::Engine::upload_i32) so every boundary
+/// crossing is counted.
+pub struct DeviceBuffer {
+    lit: xla::Literal,
+    shape: Vec<usize>,
+}
+
+impl DeviceBuffer {
+    pub(crate) fn from_f32(data: &[f32], shape: &[usize]) -> Result<Self> {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Ok(DeviceBuffer {
+            lit: host_to_literal_f32(data, shape)?,
+            shape: shape.to_vec(),
+        })
+    }
+
+    pub(crate) fn from_i32(data: &[i32], shape: &[usize]) -> Result<Self> {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Ok(DeviceBuffer {
+            lit: host_to_literal_i32(data, shape)?,
+            shape: shape.to_vec(),
+        })
+    }
+
+    /// Wrap an execution output so it stays resident for the next call.
+    pub(crate) fn from_literal(lit: xla::Literal, shape: Vec<usize>) -> Self {
+        DeviceBuffer { lit, shape }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Payload size (all artifact tensors are 4-byte f32/s32 elements).
+    pub fn byte_len(&self) -> usize {
+        self.elems() * 4
+    }
+
+    pub(crate) fn literal(&self) -> &xla::Literal {
+        &self.lit
+    }
+
+    pub(crate) fn to_host_f32(&self) -> Result<Vec<f32>> {
+        literal_to_f32(&self.lit)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

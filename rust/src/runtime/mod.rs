@@ -8,17 +8,25 @@
 //!
 //! The engine is the only place where model bytes cross the host/PJRT
 //! boundary; everything above it (split engine, coordinator) works with
-//! plain `Vec<f32>`.
+//! plain `Vec<f32>`, or — on the resident hot path (EXPERIMENTS.md
+//! §Perf L6) — with [`DeviceBuffer`]s that stay on the PJRT side across
+//! batches and only materialize at round boundaries.  Every crossing of
+//! that boundary is counted (`h2d_*`/`d2h_*` in [`EngineStats`] plus the
+//! obs counters), for both paths, so the resident path's savings show up
+//! as an honest A/B in the same units.
 
 pub mod literal;
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 use crate::error::{Error, Result};
 use crate::manifest::Manifest;
+use crate::obs::metric::wellknown as om;
 
-pub use literal::{host_to_literal_f32, host_to_literal_i32, literal_to_f32, HostTensor};
+pub use literal::{
+    host_to_literal_f32, host_to_literal_i32, literal_to_f32, DeviceBuffer, HostTensor,
+};
 
 /// Engine statistics (perf pass instrumentation).
 #[derive(Clone, Debug, Default)]
@@ -26,6 +34,14 @@ pub struct EngineStats {
     pub compiles: u64,
     pub executions: u64,
     pub exec_seconds: f64,
+    /// Host -> device crossings (host slice -> PJRT literal) and bytes.
+    pub h2d_transfers: u64,
+    pub h2d_bytes: u64,
+    /// Device -> host crossings (PJRT literal -> host vec) and bytes.
+    pub d2h_transfers: u64,
+    pub d2h_bytes: u64,
+    /// Host seconds spent marshalling bytes across that boundary.
+    pub sync_seconds: f64,
 }
 
 impl EngineStats {
@@ -37,15 +53,34 @@ impl EngineStats {
             compiles: self.compiles.saturating_sub(earlier.compiles),
             executions: self.executions.saturating_sub(earlier.executions),
             exec_seconds: (self.exec_seconds - earlier.exec_seconds).max(0.0),
+            h2d_transfers: self.h2d_transfers.saturating_sub(earlier.h2d_transfers),
+            h2d_bytes: self.h2d_bytes.saturating_sub(earlier.h2d_bytes),
+            d2h_transfers: self.d2h_transfers.saturating_sub(earlier.d2h_transfers),
+            d2h_bytes: self.d2h_bytes.saturating_sub(earlier.d2h_bytes),
+            sync_seconds: (self.sync_seconds - earlier.sync_seconds).max(0.0),
         }
     }
+
+    /// Total bytes that crossed the host/device boundary, either way.
+    pub fn transfer_bytes(&self) -> u64 {
+        self.h2d_bytes + self.d2h_bytes
+    }
+}
+
+/// One executable-cache slot: either compiled, or claimed by an
+/// in-flight first-touch compile that other threads must wait on.
+enum Slot {
+    Building,
+    Ready(std::sync::Arc<xla::PjRtLoadedExecutable>),
 }
 
 /// A PJRT client plus a lazily-populated executable cache.
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: std::sync::Arc<Manifest>,
-    executables: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    executables: Mutex<HashMap<String, Slot>>,
+    /// Signalled whenever an in-flight compile resolves (ok or err).
+    compile_done: Condvar,
     stats: Mutex<EngineStats>,
 }
 
@@ -56,6 +91,7 @@ impl Engine {
             client: xla::PjRtClient::cpu()?,
             manifest,
             executables: Mutex::new(HashMap::new()),
+            compile_done: Condvar::new(),
             stats: Mutex::new(EngineStats::default()),
         })
     }
@@ -73,22 +109,50 @@ impl Engine {
     }
 
     /// Get (compiling on first use) the executable for an artifact.
+    ///
+    /// Exactly one thread compiles each artifact: the first toucher
+    /// claims the slot and compiles outside the lock (so first-touch
+    /// compiles of *different* artifacts still parallelize), later
+    /// touchers wait on the condvar instead of duplicating the compile.
+    /// A failed compile releases the claim so a later call can retry.
     pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.executables.lock().unwrap().get(name) {
-            return Ok(e.clone());
+        {
+            let mut cache = self.executables.lock().unwrap();
+            loop {
+                match cache.get(name) {
+                    Some(Slot::Ready(e)) => return Ok(e.clone()),
+                    Some(Slot::Building) => {
+                        cache = self.compile_done.wait(cache).unwrap();
+                    }
+                    None => {
+                        cache.insert(name.to_string(), Slot::Building);
+                        break;
+                    }
+                }
+            }
         }
-        // Compile outside the lock: first-touch compiles of different
-        // artifacts can proceed in parallel.
+        match self.compile_artifact(name) {
+            Ok(exe) => {
+                self.stats.lock().unwrap().compiles += 1;
+                let mut cache = self.executables.lock().unwrap();
+                cache.insert(name.to_string(), Slot::Ready(exe.clone()));
+                self.compile_done.notify_all();
+                Ok(exe)
+            }
+            Err(e) => {
+                self.executables.lock().unwrap().remove(name);
+                self.compile_done.notify_all();
+                Err(e)
+            }
+        }
+    }
+
+    /// The expensive part of a first touch: parse + XLA-compile.
+    fn compile_artifact(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
         let path = self.manifest.artifact_path(name)?;
         let proto = xla::HloModuleProto::from_text_file(&path)?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
-        let mut cache = self.executables.lock().unwrap();
-        let entry = cache.entry(name.to_string()).or_insert_with(|| {
-            self.stats.lock().unwrap().compiles += 1;
-            exe
-        });
-        Ok(entry.clone())
+        Ok(std::sync::Arc::new(self.client.compile(&comp)?))
     }
 
     /// Eagerly compile a set of artifacts (warm-up before the timed path).
@@ -99,11 +163,58 @@ impl Engine {
         Ok(())
     }
 
+    /// Copy a host f32 slice across the boundary into a resident buffer.
+    pub fn upload_f32(&self, data: &[f32], shape: &[usize]) -> Result<DeviceBuffer> {
+        let t0 = std::time::Instant::now();
+        let buf = DeviceBuffer::from_f32(data, shape)?;
+        self.note_h2d(buf.byte_len() as u64, t0.elapsed().as_secs_f64());
+        Ok(buf)
+    }
+
+    /// Copy a host i32 slice across the boundary into a resident buffer.
+    pub fn upload_i32(&self, data: &[i32], shape: &[usize]) -> Result<DeviceBuffer> {
+        let t0 = std::time::Instant::now();
+        let buf = DeviceBuffer::from_i32(data, shape)?;
+        self.note_h2d(buf.byte_len() as u64, t0.elapsed().as_secs_f64());
+        Ok(buf)
+    }
+
+    /// Copy a resident buffer's f32 payload back to the host.
+    pub fn download_f32(&self, buf: &DeviceBuffer) -> Result<Vec<f32>> {
+        let t0 = std::time::Instant::now();
+        let v = buf.to_host_f32()?;
+        self.note_d2h(4 * v.len() as u64, t0.elapsed().as_secs_f64());
+        Ok(v)
+    }
+
+    fn note_h2d(&self, bytes: u64, secs: f64) {
+        om::H2D_TRANSFERS_TOTAL.inc();
+        om::H2D_BYTES_TOTAL.add(bytes);
+        om::SYNC_LATENCY_US.observe_seconds(secs);
+        let mut s = self.stats.lock().unwrap();
+        s.h2d_transfers += 1;
+        s.h2d_bytes += bytes;
+        s.sync_seconds += secs;
+    }
+
+    fn note_d2h(&self, bytes: u64, secs: f64) {
+        om::D2H_TRANSFERS_TOTAL.inc();
+        om::D2H_BYTES_TOTAL.add(bytes);
+        om::SYNC_LATENCY_US.observe_seconds(secs);
+        let mut s = self.stats.lock().unwrap();
+        s.d2h_transfers += 1;
+        s.d2h_bytes += bytes;
+        s.sync_seconds += secs;
+    }
+
     /// Execute an artifact with host inputs; returns one flat f32 vector
     /// per tuple element (scalars become length-1 vectors).
     ///
     /// Input shapes are validated against the manifest before launch so a
     /// topology bug fails with a readable error instead of an XLA abort.
+    /// Every input marshalled in and output marshalled out is a boundary
+    /// crossing and is counted as such, symmetrically with the resident
+    /// path's explicit uploads/downloads.
     pub fn execute(&self, name: &str, inputs: &[HostTensor<'_>]) -> Result<Vec<Vec<f32>>> {
         let info = self.manifest.artifact(name)?;
         if inputs.len() != info.inputs.len() {
@@ -113,7 +224,9 @@ impl Engine {
                 inputs.len()
             )));
         }
+        let t_up = std::time::Instant::now();
         let mut literals = Vec::with_capacity(inputs.len());
+        let mut up_bytes = 0u64;
         for (i, t) in inputs.iter().enumerate() {
             let expected = &info.inputs[i];
             if t.shape() != expected.as_slice() {
@@ -123,12 +236,90 @@ impl Engine {
                     context: format!("{name} input {i}"),
                 });
             }
+            up_bytes += 4 * t.shape().iter().product::<usize>() as u64;
             literals.push(t.to_literal()?);
         }
+        let up_secs = t_up.elapsed().as_secs_f64();
         let exe = self.executable(name)?;
 
         let t0 = std::time::Instant::now();
         let result = exe.execute::<xla::Literal>(&literals)?;
+        let root = result[0][0].to_literal_sync()?;
+        let dt = t0.elapsed().as_secs_f64();
+
+        let parts = root.to_tuple()?;
+        if parts.len() != info.outputs.len() {
+            return Err(Error::other(format!(
+                "{name}: expected {} outputs, got {}",
+                info.outputs.len(),
+                parts.len()
+            )));
+        }
+        let t_down = std::time::Instant::now();
+        let mut out = Vec::with_capacity(parts.len());
+        let mut down_bytes = 0u64;
+        for l in &parts {
+            let v = literal_to_f32(l)?;
+            down_bytes += 4 * v.len() as u64;
+            out.push(v);
+        }
+        let down_secs = t_down.elapsed().as_secs_f64();
+
+        om::H2D_TRANSFERS_TOTAL.add(inputs.len() as u64);
+        om::H2D_BYTES_TOTAL.add(up_bytes);
+        om::D2H_TRANSFERS_TOTAL.add(out.len() as u64);
+        om::D2H_BYTES_TOTAL.add(down_bytes);
+        om::SYNC_LATENCY_US.observe_seconds(up_secs);
+        om::SYNC_LATENCY_US.observe_seconds(down_secs);
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.executions += 1;
+            s.exec_seconds += dt;
+            s.h2d_transfers += inputs.len() as u64;
+            s.h2d_bytes += up_bytes;
+            s.d2h_transfers += out.len() as u64;
+            s.d2h_bytes += down_bytes;
+            s.sync_seconds += up_secs + down_secs;
+        }
+        Ok(out)
+    }
+
+    /// Execute an artifact with device-resident inputs, leaving the
+    /// outputs resident (EXPERIMENTS.md §Perf L6).
+    ///
+    /// Runs the exact same executable as [`Engine::execute`]; only the
+    /// marshalling differs, so the results are bit-identical to the host
+    /// path.  No bytes cross the host boundary here — uploads happen in
+    /// [`Engine::upload_f32`]/[`Engine::upload_i32`] and downloads in
+    /// [`Engine::download_f32`].
+    pub fn execute_resident(
+        &self,
+        name: &str,
+        inputs: &[&DeviceBuffer],
+    ) -> Result<Vec<DeviceBuffer>> {
+        let info = self.manifest.artifact(name)?;
+        if inputs.len() != info.inputs.len() {
+            return Err(Error::other(format!(
+                "{name}: expected {} inputs, got {}",
+                info.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, b) in inputs.iter().enumerate() {
+            let expected = &info.inputs[i];
+            if b.shape() != expected.as_slice() {
+                return Err(Error::Shape {
+                    expected: expected.clone(),
+                    got: b.shape().to_vec(),
+                    context: format!("{name} input {i}"),
+                });
+            }
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<&xla::Literal> = inputs.iter().map(|b| b.literal()).collect();
+
+        let t0 = std::time::Instant::now();
+        let result = exe.execute::<&xla::Literal>(&literals)?;
         let root = result[0][0].to_literal_sync()?;
         let dt = t0.elapsed().as_secs_f64();
         {
@@ -145,7 +336,11 @@ impl Engine {
                 parts.len()
             )));
         }
-        parts.into_iter().map(|l| literal_to_f32(&l)).collect()
+        Ok(parts
+            .into_iter()
+            .zip(info.outputs.iter())
+            .map(|(lit, shape)| DeviceBuffer::from_literal(lit, shape.clone()))
+            .collect())
     }
 }
 
@@ -161,16 +356,31 @@ mod tests {
 
     #[test]
     fn stats_since_is_a_delta() {
-        let a = EngineStats { compiles: 2, executions: 10, exec_seconds: 1.5 };
-        let b = EngineStats { compiles: 3, executions: 25, exec_seconds: 4.0 };
+        let a = EngineStats {
+            compiles: 2,
+            executions: 10,
+            exec_seconds: 1.5,
+            h2d_bytes: 100,
+            ..Default::default()
+        };
+        let b = EngineStats {
+            compiles: 3,
+            executions: 25,
+            exec_seconds: 4.0,
+            h2d_bytes: 700,
+            ..Default::default()
+        };
         let d = b.since(&a);
         assert_eq!(d.compiles, 1);
         assert_eq!(d.executions, 15);
         assert!((d.exec_seconds - 2.5).abs() < 1e-12);
+        assert_eq!(d.h2d_bytes, 600);
+        assert_eq!(d.transfer_bytes(), 600);
         // snapshots taken out of order clamp to zero rather than wrap
         let z = a.since(&b);
         assert_eq!(z.executions, 0);
         assert_eq!(z.exec_seconds, 0.0);
+        assert_eq!(z.h2d_bytes, 0);
     }
 
     #[test]
@@ -201,6 +411,82 @@ mod tests {
     }
 
     #[test]
+    fn execute_counts_boundary_traffic() {
+        let Some(e) = engine() else { return };
+        let n = e.manifest().total_params;
+        let params = vec![0.0f32; n];
+        let x = vec![0.0f32; 16 * 32 * 32 * 3];
+        let s0 = e.stats();
+        e.execute(
+            "full_eval_b16",
+            &[
+                HostTensor::f32(&params, vec![n]),
+                HostTensor::f32(&x, vec![16, 32, 32, 3]),
+            ],
+        )
+        .unwrap();
+        let d = e.stats().since(&s0);
+        assert_eq!(d.h2d_transfers, 2);
+        assert_eq!(d.h2d_bytes, 4 * (n as u64 + 16 * 32 * 32 * 3));
+        assert_eq!(d.d2h_transfers, 1);
+        assert_eq!(d.d2h_bytes, 4 * 16 * 10);
+    }
+
+    #[test]
+    fn resident_execute_matches_host_execute_bitwise() {
+        let Some(e) = engine() else { return };
+        let n = e.manifest().total_params;
+        let params: Vec<f32> = (0..n).map(|i| (i as f32 * 0.001).sin() * 0.05).collect();
+        let x: Vec<f32> = (0..16 * 32 * 32 * 3).map(|i| (i as f32 * 0.01).cos()).collect();
+        let host = e
+            .execute(
+                "full_eval_b16",
+                &[
+                    HostTensor::f32(&params, vec![n]),
+                    HostTensor::f32(&x, vec![16, 32, 32, 3]),
+                ],
+            )
+            .unwrap();
+        let p = e.upload_f32(&params, &[n]).unwrap();
+        let xb = e.upload_f32(&x, &[16, 32, 32, 3]).unwrap();
+        let out = e.execute_resident("full_eval_b16", &[&p, &xb]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[16, 10]);
+        let logits = e.download_f32(&out[0]).unwrap();
+        assert_eq!(logits.len(), host[0].len());
+        for (a, b) in host[0].iter().zip(logits.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn upload_download_roundtrip_counts_bytes() {
+        let Some(e) = engine() else { return };
+        let data: Vec<f32> = (0..64).map(|i| i as f32 * 0.5 - 7.0).collect();
+        let s0 = e.stats();
+        let buf = e.upload_f32(&data, &[64]).unwrap();
+        assert_eq!(buf.elems(), 64);
+        assert_eq!(buf.byte_len(), 256);
+        let back = e.download_f32(&buf).unwrap();
+        assert_eq!(back, data);
+        let d = e.stats().since(&s0);
+        assert_eq!(d.h2d_transfers, 1);
+        assert_eq!(d.h2d_bytes, 256);
+        assert_eq!(d.d2h_transfers, 1);
+        assert_eq!(d.d2h_bytes, 256);
+    }
+
+    #[test]
+    fn resident_shape_mismatch_is_detected_before_launch() {
+        let Some(e) = engine() else { return };
+        let bad = e.upload_f32(&[0.0, 0.0, 0.0], &[3]).unwrap();
+        let err = e
+            .execute_resident("full_eval_b16", &[&bad, &bad])
+            .unwrap_err();
+        assert!(matches!(err, Error::Shape { .. }));
+    }
+
+    #[test]
     fn input_shape_mismatch_is_detected_before_launch() {
         let Some(e) = engine() else { return };
         let bad = vec![0.0f32; 3];
@@ -223,5 +509,14 @@ mod tests {
         let c1 = e.stats().compiles;
         e.executable("full_eval_b16").unwrap();
         assert_eq!(e.stats().compiles, c1);
+    }
+
+    #[test]
+    fn failed_compile_releases_the_slot() {
+        let Some(e) = engine() else { return };
+        // An unknown artifact errors, and keeps erroring (no poisoned
+        // Building marker left behind to deadlock later callers).
+        assert!(e.executable("no_such_artifact").is_err());
+        assert!(e.executable("no_such_artifact").is_err());
     }
 }

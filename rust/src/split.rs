@@ -17,7 +17,7 @@
 use crate::data::IMG_ELEMS;
 use crate::error::{Error, Result};
 use crate::model::ModelMeta;
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{DeviceBuffer, Engine, HostTensor};
 
 /// Device-side training state (travels *with* the device).
 #[derive(Clone, Debug, PartialEq)]
@@ -105,11 +105,53 @@ pub struct BatchOutcome {
     pub times: PhaseTimes,
 }
 
+/// The three phase-executable names for one split point, formatted once
+/// at construction instead of once per batch on the hot path.
+struct PhaseNames {
+    device_fwd: String,
+    server_step: String,
+    device_bwd: String,
+}
+
+/// Device-resident split-training state for one device (EXPERIMENTS.md
+/// §Perf L6): both parameter/momentum halves live as PJRT buffers across
+/// the batches of a local epoch, so each phase execution feeds the next
+/// without round-tripping through host vectors.  The host `DeviceState` /
+/// `ServerState` are stale while a pair is live; [`SplitEngine::finish_round`]
+/// syncs them back at the round boundary (before FedAvg, checkpointing,
+/// or eval).
+pub struct ResidentPair {
+    sp: usize,
+    dev_params: DeviceBuffer,
+    dev_momentum: DeviceBuffer,
+    srv_params: DeviceBuffer,
+    srv_momentum: DeviceBuffer,
+    /// Last smashed-gradient; checkpoint state, so it is materialized
+    /// only at the round boundary, never per batch.
+    last_grad: Option<DeviceBuffer>,
+    last_loss: f32,
+    batches: u64,
+}
+
+impl ResidentPair {
+    pub fn sp(&self) -> usize {
+        self.sp
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+}
+
 /// Split-learning engine bound to one artifact batch size.
 pub struct SplitEngine<'e> {
     engine: &'e Engine,
     meta: ModelMeta,
     batch: usize,
+    /// Cached artifact names, indexed `sp - 1` (splits are 1..=3).
+    names: Vec<PhaseNames>,
+    full_eval_name: String,
+    full_step_name: String,
 }
 
 impl<'e> SplitEngine<'e> {
@@ -120,11 +162,29 @@ impl<'e> SplitEngine<'e> {
                 meta.manifest.batch_variants
             )));
         }
+        let names = (1..=3)
+            .map(|sp| PhaseNames {
+                device_fwd: meta.device_fwd_name(sp, batch),
+                server_step: meta.server_step_name(sp, batch),
+                device_bwd: meta.device_bwd_name(sp, batch),
+            })
+            .collect();
+        let full_eval_name = meta.full_eval_name(batch);
+        let full_step_name = meta.full_step_name(batch);
         Ok(SplitEngine {
             engine,
             meta,
             batch,
+            names,
+            full_eval_name,
+            full_step_name,
         })
+    }
+
+    fn names(&self, sp: usize) -> Result<&PhaseNames> {
+        self.names
+            .get(sp.wrapping_sub(1))
+            .ok_or_else(|| Error::Config(format!("split point {sp} out of range (1..=3)")))
     }
 
     pub fn batch(&self) -> usize {
@@ -137,10 +197,11 @@ impl<'e> SplitEngine<'e> {
 
     /// Warm up (compile) the three phase executables for split `sp`.
     pub fn warm_up(&self, sp: usize) -> Result<()> {
+        let n = self.names(sp)?;
         self.engine.warm_up(&[
-            self.meta.device_fwd_name(sp, self.batch).as_str(),
-            self.meta.server_step_name(sp, self.batch).as_str(),
-            self.meta.device_bwd_name(sp, self.batch).as_str(),
+            n.device_fwd.as_str(),
+            n.server_step.as_str(),
+            n.device_bwd.as_str(),
         ])
     }
 
@@ -167,14 +228,14 @@ impl<'e> SplitEngine<'e> {
                 labels.len()
             )));
         }
+        let names = self.names(sp)?;
         let mut times = PhaseTimes::default();
 
         // Step 2: device forward -> smashed activation.
         let t0 = std::time::Instant::now();
         let smashed = {
-            let name = self.meta.device_fwd_name(sp, b);
             let out = self.engine.execute(
-                &name,
+                &names.device_fwd,
                 &[
                     HostTensor::f32(&dev.params, vec![dev.params.len()]),
                     HostTensor::f32(x, vec![b, 32, 32, 3]),
@@ -191,9 +252,8 @@ impl<'e> SplitEngine<'e> {
         };
         let t1 = std::time::Instant::now();
         let (new_srv, new_mom, grad_smashed, loss) = {
-            let name = self.meta.server_step_name(sp, b);
             let mut out = self.engine.execute(
-                &name,
+                &names.server_step,
                 &[
                     HostTensor::f32(&srv.params, vec![srv.params.len()]),
                     HostTensor::f32(&srv.momentum, vec![srv.momentum.len()]),
@@ -212,9 +272,8 @@ impl<'e> SplitEngine<'e> {
         // Step 3b: device backward.
         let t2 = std::time::Instant::now();
         let (new_dev, new_dmom) = {
-            let name = self.meta.device_bwd_name(sp, b);
             let mut out = self.engine.execute(
-                &name,
+                &names.device_bwd,
                 &[
                     HostTensor::f32(&dev.params, vec![dev.params.len()]),
                     HostTensor::f32(&dev.momentum, vec![dev.momentum.len()]),
@@ -239,6 +298,121 @@ impl<'e> SplitEngine<'e> {
         Ok(BatchOutcome { loss, times })
     }
 
+    /// Upload both halves of a device's training state for a resident
+    /// epoch (EXPERIMENTS.md §Perf L6).
+    pub fn upload_pair(&self, dev: &DeviceState, srv: &ServerState) -> Result<ResidentPair> {
+        if dev.sp != srv.sp {
+            return Err(Error::Config(format!(
+                "split mismatch: device sp{} vs server sp{}",
+                dev.sp, srv.sp
+            )));
+        }
+        let e = self.engine;
+        Ok(ResidentPair {
+            sp: dev.sp,
+            dev_params: e.upload_f32(&dev.params, &[dev.params.len()])?,
+            dev_momentum: e.upload_f32(&dev.momentum, &[dev.momentum.len()])?,
+            srv_params: e.upload_f32(&srv.params, &[srv.params.len()])?,
+            srv_momentum: e.upload_f32(&srv.momentum, &[srv.momentum.len()])?,
+            last_grad: None,
+            last_loss: f32::NAN,
+            batches: 0,
+        })
+    }
+
+    /// One batch of split training on resident state — the same three
+    /// executions over the same values as [`SplitEngine::train_batch`],
+    /// so the updated state is bit-identical; only the marshalling
+    /// differs (upload x + labels, download the loss scalar).
+    pub fn train_batch_resident(
+        &self,
+        pair: &mut ResidentPair,
+        x: &[f32],
+        labels: &[i32],
+    ) -> Result<BatchOutcome> {
+        let b = self.batch;
+        if x.len() != b * IMG_ELEMS || labels.len() != b {
+            return Err(Error::other(format!(
+                "train_batch: bad batch sizes x={} labels={}",
+                x.len(),
+                labels.len()
+            )));
+        }
+        let names = self.names(pair.sp)?;
+        let mut times = PhaseTimes::default();
+
+        // Step 2: device forward.  x is uploaded once and reused by the
+        // backward pass below (the host path marshals it twice).
+        let t0 = std::time::Instant::now();
+        let x_res = self.engine.upload_f32(x, &[b, 32, 32, 3])?;
+        let smashed = self
+            .engine
+            .execute_resident(&names.device_fwd, &[&pair.dev_params, &x_res])?
+            .into_iter()
+            .next()
+            .unwrap();
+        times.device_fwd = t0.elapsed().as_secs_f64();
+
+        // Step 3a: edge-server step; only the loss scalar comes home.
+        let t1 = std::time::Instant::now();
+        let labels_res = self.engine.upload_i32(labels, &[b])?;
+        let mut out = self.engine.execute_resident(
+            &names.server_step,
+            &[
+                &pair.srv_params,
+                &pair.srv_momentum,
+                &smashed,
+                &labels_res,
+            ],
+        )?;
+        let loss = self.engine.download_f32(&out.pop().unwrap())?[0];
+        let grad = out.pop().unwrap();
+        pair.srv_momentum = out.pop().unwrap();
+        pair.srv_params = out.pop().unwrap();
+        times.server_step = t1.elapsed().as_secs_f64();
+
+        // Step 3b: device backward, consuming the still-resident x/grad.
+        let t2 = std::time::Instant::now();
+        let mut out = self.engine.execute_resident(
+            &names.device_bwd,
+            &[&pair.dev_params, &pair.dev_momentum, &x_res, &grad],
+        )?;
+        pair.dev_momentum = out.pop().unwrap();
+        pair.dev_params = out.pop().unwrap();
+        times.device_bwd = t2.elapsed().as_secs_f64();
+
+        pair.last_grad = Some(grad);
+        pair.last_loss = loss;
+        pair.batches += 1;
+        Ok(BatchOutcome { loss, times })
+    }
+
+    /// Sync a resident pair back into the host states at the round
+    /// boundary.  Mirrors exactly what `train_batch` leaves behind per
+    /// batch, so the host states are bit-identical to the host path's
+    /// (zero-batch epochs round-trip the uploaded bytes unchanged and
+    /// leave the loss/batch metadata untouched).
+    pub fn finish_round(
+        &self,
+        pair: ResidentPair,
+        dev: &mut DeviceState,
+        srv: &mut ServerState,
+    ) -> Result<()> {
+        let e = self.engine;
+        dev.params = e.download_f32(&pair.dev_params)?;
+        dev.momentum = e.download_f32(&pair.dev_momentum)?;
+        srv.params = e.download_f32(&pair.srv_params)?;
+        srv.momentum = e.download_f32(&pair.srv_momentum)?;
+        if let Some(grad) = &pair.last_grad {
+            srv.last_grad_smashed = e.download_f32(grad)?;
+        }
+        if pair.batches > 0 {
+            srv.last_loss = pair.last_loss;
+            srv.batches_done += pair.batches;
+        }
+        Ok(())
+    }
+
     /// Monolithic (non-split) step — the classic-FL comparator.
     pub fn full_step(
         &self,
@@ -248,9 +422,8 @@ impl<'e> SplitEngine<'e> {
         labels: &[i32],
     ) -> Result<f32> {
         let b = self.batch;
-        let name = self.meta.full_step_name(b);
         let mut out = self.engine.execute(
-            &name,
+            &self.full_step_name,
             &[
                 HostTensor::f32(params, vec![params.len()]),
                 HostTensor::f32(momentum, vec![momentum.len()]),
@@ -267,9 +440,8 @@ impl<'e> SplitEngine<'e> {
     /// Logits for a test batch (accuracy evaluation).
     pub fn eval_logits(&self, params: &[f32], x: &[f32]) -> Result<Vec<f32>> {
         let b = self.batch;
-        let name = self.meta.full_eval_name(b);
         let out = self.engine.execute(
-            &name,
+            &self.full_eval_name,
             &[
                 HostTensor::f32(params, vec![params.len()]),
                 HostTensor::f32(x, vec![b, 32, 32, 3]),
@@ -374,6 +546,64 @@ mod tests {
             last = se.train_batch(&mut dev, &mut srv, &x, &y).unwrap().loss;
         }
         assert!(last < first, "loss did not decrease: {first} -> {last}");
+    }
+
+    #[test]
+    fn resident_path_is_bit_identical_to_host_path() {
+        let Some((engine, meta)) = setup() else { return };
+        let se = SplitEngine::new(&engine, meta.clone(), 16).unwrap();
+        let ds = SyntheticCifar::new(3, 64);
+        let global = meta.init_params(11);
+        let sp = 2;
+        let mut dev_h = DeviceState::from_global(&meta, sp, &global).unwrap();
+        let mut srv_h = ServerState::from_global(&meta, sp, &global).unwrap();
+        let mut dev_r = dev_h.clone();
+        let mut srv_r = srv_h.clone();
+        let mut pair = se.upload_pair(&dev_r, &srv_r).unwrap();
+        for i in 0..3 {
+            let idxs: Vec<usize> = (i * 16..(i + 1) * 16).collect();
+            let (x, y) = ds.batch(&idxs);
+            let host = se.train_batch(&mut dev_h, &mut srv_h, &x, &y).unwrap();
+            let res = se.train_batch_resident(&mut pair, &x, &y).unwrap();
+            assert_eq!(
+                host.loss.to_bits(),
+                res.loss.to_bits(),
+                "loss diverged at batch {i}"
+            );
+        }
+        assert_eq!(pair.sp(), sp);
+        assert_eq!(pair.batches(), 3);
+        se.finish_round(pair, &mut dev_r, &mut srv_r).unwrap();
+        assert_eq!(dev_h, dev_r);
+        assert_eq!(srv_h, srv_r);
+    }
+
+    #[test]
+    fn resident_zero_batch_round_is_a_noop() {
+        let Some((engine, meta)) = setup() else { return };
+        let se = SplitEngine::new(&engine, meta.clone(), 16).unwrap();
+        let global = meta.init_params(5);
+        let mut dev = DeviceState::from_global(&meta, 1, &global).unwrap();
+        let mut srv = ServerState::from_global(&meta, 1, &global).unwrap();
+        let dev0 = dev.clone();
+        let srv0 = srv.clone();
+        let pair = se.upload_pair(&dev, &srv).unwrap();
+        se.finish_round(pair, &mut dev, &mut srv).unwrap();
+        assert_eq!(dev, dev0);
+        // last_loss starts as NaN, so compare the fields that carry data
+        assert_eq!(srv.params, srv0.params);
+        assert_eq!(srv.momentum, srv0.momentum);
+        assert_eq!(srv.batches_done, 0);
+    }
+
+    #[test]
+    fn resident_split_mismatch_rejected() {
+        let Some((engine, meta)) = setup() else { return };
+        let se = SplitEngine::new(&engine, meta.clone(), 16).unwrap();
+        let global = meta.init_params(0);
+        let dev = DeviceState::from_global(&meta, 1, &global).unwrap();
+        let srv = ServerState::from_global(&meta, 2, &global).unwrap();
+        assert!(se.upload_pair(&dev, &srv).is_err());
     }
 
     #[test]

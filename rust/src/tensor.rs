@@ -83,7 +83,15 @@ impl Tensor {
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
     }
 
+    /// Largest element-wise `|a - b|` between two tensors of the same
+    /// shape.  Panics on shape mismatch — a silent zip would truncate to
+    /// the shorter tensor and report a bogus (too small) difference.
     pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(
+            self.shape, other.shape,
+            "max_abs_diff: shape mismatch ({:?} vs {:?})",
+            self.shape, other.shape
+        );
         self.data
             .iter()
             .zip(&other.data)
@@ -269,6 +277,22 @@ mod tests {
     fn l2_norm() {
         let t = Tensor::from_vec(vec![3.0, 4.0]);
         assert!((t.l2_norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_abs_diff_same_shape() {
+        let a = Tensor::from_vec(vec![1.0, -2.0, 3.0]);
+        let b = Tensor::from_vec(vec![1.5, -2.0, 1.0]);
+        assert_eq!(a.max_abs_diff(&b), 2.0);
+        assert_eq!(a.max_abs_diff(&a), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "max_abs_diff")]
+    fn max_abs_diff_rejects_shape_mismatch() {
+        let a = Tensor::from_vec(vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(vec![1.0, 2.0]);
+        let _ = a.max_abs_diff(&b);
     }
 
     #[test]

@@ -252,6 +252,20 @@ fn simonly_fault_injection_bit_identical_across_worker_counts() {
 }
 
 #[test]
+fn simonly_resident_flag_is_inert() {
+    // SimOnly never executes HLO, so the resident-buffer flag must not
+    // perturb anything (it only routes the Real-mode hot path).
+    let base = run_sim(1, Strategy::FedFly, 0.0);
+    let mut cfg = RunConfig::paper_testbed();
+    cfg.rounds = 12;
+    cfg.schedule = busy_schedule();
+    cfg.workers = 1;
+    cfg.resident_buffers = false;
+    let off = Runner::new(cfg, sim_meta()).unwrap().run(None).unwrap();
+    assert_reports_identical(&base, &off, "sim resident off");
+}
+
+#[test]
 fn pool_reports_worker_perf_accounting() {
     let r = run_sim(4, Strategy::FedFly, 0.0);
     assert_eq!(r.perf.workers, 4);
@@ -325,6 +339,74 @@ fn real_mode_bit_identical_across_worker_counts() {
             .unwrap();
         assert_reports_identical(&base, &r, &format!("real workers={w}"));
     }
+}
+
+fn real_cfg_resident(workers: usize, resident: bool) -> RunConfig {
+    let mut cfg = real_cfg(workers);
+    cfg.resident_buffers = resident;
+    cfg
+}
+
+/// §Perf L6 acceptance: the resident-buffer path produces bit-identical
+/// losses, accuracy, migrated checkpoints and final parameters to the
+/// per-batch host-literal reference path — serial and pooled, with
+/// migrations in flight.
+#[test]
+fn real_mode_resident_bit_identical_to_host_path() {
+    let Ok(meta) = load_meta() else { return };
+    let Ok(engine) = Engine::new(meta.manifest.clone()) else { return };
+
+    let host = Runner::new(real_cfg_resident(1, false), meta.clone())
+        .unwrap()
+        .run(Some(&engine))
+        .unwrap();
+    let moves: usize = host.summaries().iter().map(|s| s.moves).sum();
+    assert_eq!(moves, 2, "schedule should drive 2 migrations");
+
+    let resident = Runner::new(real_cfg_resident(1, true), meta.clone())
+        .unwrap()
+        .run(Some(&engine))
+        .unwrap();
+    assert_reports_identical(&host, &resident, "resident serial");
+
+    for w in [2usize, 4] {
+        let r = Runner::new(real_cfg_resident(w, true), meta.clone())
+            .unwrap()
+            .run(None)
+            .unwrap();
+        assert_reports_identical(&host, &r, &format!("resident workers={w}"));
+    }
+}
+
+/// §Perf L6 acceptance: keeping state resident cuts the bytes crossing
+/// the host<->device boundary per run by at least 2x (eval traffic, which
+/// is identical in both modes, is included — the bound holds anyway).
+#[test]
+fn real_mode_resident_cuts_transfer_bytes() {
+    let Ok(meta) = load_meta() else { return };
+    let Ok(engine) = Engine::new(meta.manifest.clone()) else { return };
+
+    let s0 = engine.stats();
+    Runner::new(real_cfg_resident(1, false), meta.clone())
+        .unwrap()
+        .run(Some(&engine))
+        .unwrap();
+    let host = engine.stats().since(&s0);
+
+    let s1 = engine.stats();
+    Runner::new(real_cfg_resident(1, true), meta)
+        .unwrap()
+        .run(Some(&engine))
+        .unwrap();
+    let resident = engine.stats().since(&s1);
+
+    assert!(host.transfer_bytes() > 0 && resident.transfer_bytes() > 0);
+    assert!(
+        host.transfer_bytes() >= 2 * resident.transfer_bytes(),
+        "host path moved {} bytes, resident {} — expected >= 2x reduction",
+        host.transfer_bytes(),
+        resident.transfer_bytes()
+    );
 }
 
 /// Pool workers execute HLO on their private engines and say so.
