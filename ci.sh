@@ -10,6 +10,16 @@ cd "$(dirname "$0")"
 
 cargo build --release
 cargo test -q
+# Chaos suite, run explicitly with its pinned fault seeds (see
+# EXPERIMENTS.md §Robustness R1).  Every assertion echoes the seed of the
+# schedule it ran; on failure, replay the exact fault schedule with
+# `FEDFLY_FAULT_SEED=<seed> ./ci.sh` or `--faults <spec> --fault-seed
+# <seed>` on the CLI.
+if ! cargo test -q --test integration_chaos; then
+    echo "ci.sh: chaos suite FAILED (fault seed: ${FEDFLY_FAULT_SEED:-pinned per-test defaults, echoed in the assertion above})" >&2
+    echo "ci.sh: replay with FEDFLY_FAULT_SEED=<seed> cargo test -q --test integration_chaos" >&2
+    exit 1
+fi
 cargo clippy --all-targets -- -D warnings
 # Benches must keep compiling (they are run manually, not in CI).
 cargo bench --no-run

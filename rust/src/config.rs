@@ -2,6 +2,7 @@
 //! (de)serialization, and presets matching the paper's testbed.
 
 use crate::error::{Error, Result};
+use crate::faultsim::FaultPlan;
 use crate::json::{self, Value};
 use crate::migration::{MigrationRoute, Strategy};
 use crate::mobility::Schedule;
@@ -60,6 +61,12 @@ pub struct RunConfig {
     /// is lost/corrupted in transit, forcing a restart fallback at the
     /// destination edge (0.0 = reliable network).
     pub fault_loss_prob: f64,
+    /// Deterministic per-frame fault injection on the migration and RPC
+    /// paths (`faultsim`; CLI `--faults <spec>` + `--fault-seed`).  `None`
+    /// = reliable network, zero overhead.  The plan carries its own seed
+    /// so fault schedules never perturb training randomness and any run
+    /// is replayable from the seed alone.
+    pub faults: Option<FaultPlan>,
     /// Encode migrating checkpoints as bit-exact deltas against the
     /// round's broadcast global model when the destination edge holds the
     /// same base (falls back to full frames automatically).
@@ -105,6 +112,7 @@ impl RunConfig {
             seed: 7,
             workers: 1,
             fault_loss_prob: 0.0,
+            faults: None,
             delta_migration: true,
             overlap_migration: true,
             trace: false,
@@ -183,6 +191,9 @@ impl RunConfig {
                 self.fault_loss_prob
             )));
         }
+        if let Some(plan) = &self.faults {
+            plan.validate()?;
+        }
         Ok(())
     }
 
@@ -230,6 +241,17 @@ impl RunConfig {
             ("overlap_migration", Value::Bool(self.overlap_migration)),
             ("trace", Value::Bool(self.trace)),
             ("resident_buffers", Value::Bool(self.resident_buffers)),
+            (
+                "faults",
+                match &self.faults {
+                    Some(p) => json::s(&format!(
+                        "{}@seed={}",
+                        p.spec.to_spec_string(),
+                        p.seed
+                    )),
+                    None => Value::Null,
+                },
+            ),
             (
                 "moves",
                 json::arr(

@@ -28,14 +28,16 @@
 //! edge's single worker thread over a channel — the same
 //! router-in-front-of-a-worker shape vLLM-style serving routers use.
 
-use std::collections::{HashMap, HashSet};
+use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use crate::config::RunConfig;
 use crate::data::{partition, BatchIter, SyntheticCifar};
 use crate::error::{Error, Result};
+use crate::faultsim::{self, FaultInjector, FaultKind, FaultPlan, RetryPolicy};
 use crate::fl::{Contribution, GlobalModel};
 use crate::manifest::Manifest;
 use crate::migration::codec::{
@@ -87,6 +89,7 @@ pub fn run_central(
                     device,
                     weight,
                     params,
+                    ..
                 }) => {
                     if tx
                         .send(Contribution {
@@ -124,6 +127,10 @@ pub fn run_central(
                     .map_err(|_| Error::Proto("update channel closed".into()))?,
             );
         }
+        // FedAvg sums floats, so the aggregation order must not depend on
+        // TCP arrival order: sort by device id so every run of the same
+        // seed — fault-free or recovered — produces bit-identical params.
+        contributions.sort_by_key(|c| c.device);
         global.aggregate(&contributions)?;
     }
     for s in &mut edges {
@@ -176,6 +183,8 @@ impl EdgeHandle {
 
 /// Start an edge server on `listener`, connected to `central_addr`.
 /// `peers[i]` must be edge i's listener address (including our own).
+/// `faults` arms deterministic fault injection on outgoing checkpoint
+/// streams and the matching recovery machinery (`faultsim`).
 #[allow(clippy::too_many_arguments)]
 pub fn start_edge(
     listener: TcpListener,
@@ -186,6 +195,7 @@ pub fn start_edge(
     sp: usize,
     batch: usize,
     resident: bool,
+    faults: Option<FaultPlan>,
 ) -> Result<EdgeHandle> {
     let addr = listener.local_addr()?;
     let mut central = TcpStream::connect(central_addr)?;
@@ -227,9 +237,9 @@ pub fn start_edge(
         std::thread::Builder::new()
             .name(format!("edge-{edge_id}"))
             .spawn(move || {
-                if let Err(e) =
-                    edge_worker(work_rx, central, peers, manifest, meta, sp, batch, resident)
-                {
+                if let Err(e) = edge_worker(
+                    work_rx, central, peers, manifest, meta, sp, batch, resident, faults,
+                ) {
                     crate::error!("edge worker failed: {e}");
                 }
             })
@@ -276,6 +286,7 @@ fn edge_worker(
     sp: usize,
     batch: usize,
     resident: bool,
+    faults: Option<FaultPlan>,
 ) -> Result<()> {
     let engine = Engine::new(manifest)?;
     let dev_n = meta.device_params(sp)?;
@@ -299,8 +310,16 @@ fn edge_worker(
     // parked until that checkpoint lands (pre-copy reconciliation).
     let mut bases: HashMap<u64, DeltaBase> = HashMap::new();
     let mut incoming: HashMap<u64, StreamAssembler> = HashMap::new();
-    let mut expecting: HashSet<u64> = HashSet::new();
+    // Devices whose checkpoint is still expected, with the deadline after
+    // which the stream is declared lost (the sender's whole retry budget,
+    // or a generous default on a reliable network).  Expiry releases the
+    // parked batches to restart from the global — bounded, never a hang.
+    let mut expecting: HashMap<u64, Instant> = HashMap::new();
     let mut parked: Vec<ParkedBatch> = Vec::new();
+    let expect_patience = expect_patience(&faults);
+    // Device round of the last update forwarded to the central, used to
+    // re-ack (not re-forward) a retried `LocalUpdate` after a fault.
+    let mut last_update: HashMap<u64, u64> = HashMap::new();
 
     let serve_resumes =
         |global: &Option<(u64, Vec<f32>)>, pending: &mut Vec<(u64, mpsc::Sender<Msg>)>| {
@@ -319,7 +338,30 @@ fn edge_worker(
             }
         };
 
-    while let Ok(work) = work_rx.recv() {
+    loop {
+        // Block indefinitely when no stream is pending; poll while one is
+        // so an expired deadline releases its parked batches even if the
+        // sender died without a trace.
+        let next = if expecting.is_empty() {
+            match work_rx.recv() {
+                Ok(w) => Some(w),
+                Err(_) => break,
+            }
+        } else {
+            match work_rx.recv_timeout(EXPECT_POLL) {
+                Ok(w) => Some(w),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        };
+        let Some(work) = next else {
+            expire_streams(&mut expecting, &mut incoming);
+            drain_parked(
+                &mut parked, &engine, &meta, &plan, &mut states, &mut residents, &mut inbox,
+                &global, &expecting,
+            )?;
+            continue;
+        };
         match work {
             Work::Shutdown => break,
             Work::Global { round, params } => {
@@ -348,7 +390,7 @@ fn edge_worker(
                 } => {
                     if !states.contains_key(&device)
                         && !inbox.contains_key(&device)
-                        && expecting.contains(&device)
+                        && expecting.contains_key(&device)
                     {
                         // Pre-copy reconciliation: the device reconnected
                         // here while its checkpoint is still streaming in.
@@ -371,26 +413,38 @@ fn edge_worker(
                 }
                 Msg::LocalUpdate {
                     device,
+                    round,
                     weight,
                     params: dev_params,
                 } => {
-                    // The host copy goes stale while training runs on the
-                    // resident mirror; sync before aggregation reads it.
-                    materialize_server(&engine, &residents, &mut states, device)?;
-                    let srv = states.get(&device).ok_or_else(|| {
-                        Error::Proto(format!("update from unknown device {device}"))
-                    })?;
-                    let mut full = dev_params;
-                    full.extend_from_slice(&srv.params);
-                    write_msg(
-                        &mut central,
-                        &Msg::LocalUpdate {
-                            device,
-                            weight,
-                            params: full,
-                        },
-                    )?;
-                    let _ = reply.send(Msg::Ack { code: 0 });
+                    // Idempotence under retry: a device that lost the ack
+                    // resends the same (device, round) update; forward it
+                    // to the central exactly once, re-ack the copy.
+                    if last_update.get(&device) == Some(&round) {
+                        om::ack(0);
+                        let _ = reply.send(Msg::Ack { code: 0 });
+                    } else {
+                        // The host copy goes stale while training runs on
+                        // the resident mirror; sync before aggregation
+                        // reads it.
+                        materialize_server(&engine, &residents, &mut states, device)?;
+                        let srv = states.get(&device).ok_or_else(|| {
+                            Error::Proto(format!("update from unknown device {device}"))
+                        })?;
+                        let mut full = dev_params;
+                        full.extend_from_slice(&srv.params);
+                        write_msg(
+                            &mut central,
+                            &Msg::LocalUpdate {
+                                device,
+                                round,
+                                weight,
+                                params: full,
+                            },
+                        )?;
+                        last_update.insert(device, round);
+                        let _ = reply.send(Msg::Ack { code: 0 });
+                    }
                 }
                 Msg::MoveNotice { device, dest_edge } => {
                     // FedFly Steps 7-8 with pre-copy: checkpoint, register
@@ -422,6 +476,7 @@ fn edge_worker(
                                 dest,
                                 ck,
                                 bases.get(&round).cloned(),
+                                faults,
                             ) {
                                 Ok(()) => 0,
                                 Err(_) => 3,
@@ -436,23 +491,45 @@ fn edge_worker(
                     // The source registers the stream before acking the
                     // device's MoveNotice, so from this moment batches
                     // from `device` are parked, never restarted.
-                    let code = match StreamAssembler::new(total_len as usize) {
-                        Ok(a) => {
-                            incoming.insert(device, a);
-                            expecting.insert(device);
-                            crate::obs::instant(
-                                "checkpoint_stream_begin",
-                                &[
-                                    ("device", crate::obs::ArgVal::from(device)),
-                                    ("total_len", crate::obs::ArgVal::from(total_len)),
-                                ],
-                            );
-                            0
-                        }
-                        Err(_) => 1,
-                    };
-                    om::ack(code);
-                    let _ = reply.send(Msg::Ack { code });
+                    //
+                    // A Begin that matches a partial stream already held
+                    // for this device is a sender reconnecting after a
+                    // fault: offer to resume from the last good byte
+                    // instead of restarting from zero.
+                    let resumable = incoming
+                        .get(&device)
+                        .filter(|a| a.total() == total_len as usize && !a.is_complete())
+                        .map(|a| a.received() as u64);
+                    if let Some(received) = resumable {
+                        expecting.insert(device, Instant::now() + expect_patience);
+                        crate::obs::instant(
+                            "checkpoint_stream_resume",
+                            &[
+                                ("device", crate::obs::ArgVal::from(device)),
+                                ("received", crate::obs::ArgVal::from(received)),
+                            ],
+                        );
+                        om::ack(0);
+                        let _ = reply.send(Msg::CheckpointResume { device, received });
+                    } else {
+                        let code = match StreamAssembler::new(total_len as usize) {
+                            Ok(a) => {
+                                incoming.insert(device, a);
+                                expecting.insert(device, Instant::now() + expect_patience);
+                                crate::obs::instant(
+                                    "checkpoint_stream_begin",
+                                    &[
+                                        ("device", crate::obs::ArgVal::from(device)),
+                                        ("total_len", crate::obs::ArgVal::from(total_len)),
+                                    ],
+                                );
+                                0
+                            }
+                            Err(_) => 1,
+                        };
+                        om::ack(code);
+                        let _ = reply.send(Msg::Ack { code });
+                    }
                 }
                 Msg::CheckpointChunk { device, data } => {
                     let mut resolved = false;
@@ -481,12 +558,15 @@ fn edge_worker(
                             2
                         }
                     };
-                    // Code 5 = delta base missing: the sender re-streams a
-                    // full frame, so keep expecting it.  Anything else
-                    // resolves the stream (landed, or hard failure — the
-                    // parked batches then restart from the global, the
-                    // same semantics as a lost transfer).
-                    if resolved && code != 5 {
+                    // Only a cleanly landed checkpoint resolves the
+                    // expectation.  Every failure code — corrupt push (1),
+                    // stray chunk (2), delta base missing (5) — leaves the
+                    // device expected with a refreshed deadline: the
+                    // sender retries (full frame on 5, restart/resume on
+                    // the rest), and if it never succeeds the deadline
+                    // expiry releases the parked batches.  Progress on an
+                    // unresolved stream also refreshes the deadline.
+                    if resolved && code == 0 {
                         expecting.remove(&device);
                         crate::obs::instant(
                             "checkpoint_stream_resolved",
@@ -495,6 +575,8 @@ fn edge_worker(
                                 ("code", crate::obs::ArgVal::from(code)),
                             ],
                         );
+                    } else if expecting.contains_key(&device) {
+                        expecting.insert(device, Instant::now() + expect_patience);
                     }
                     om::ack(code);
                     let _ = reply.send(Msg::Ack { code });
@@ -512,26 +594,91 @@ fn edge_worker(
                 }
             },
         }
-        // Serve parked batches whose checkpoint stream has resolved:
-        // landed in the inbox (FedFly resume) or died without one (the
-        // state restarts from the global, as with any lost transfer).
-        let mut i = 0;
-        while i < parked.len() {
-            let device = parked[i].device;
-            let ready = states.contains_key(&device)
-                || inbox.contains_key(&device)
-                || !expecting.contains(&device);
-            if ready {
-                let p = parked.remove(i);
-                om::PARKED_BATCHES.add(-1);
-                let out = edge_server_step(
-                    &engine, &meta, &plan, &mut states, &mut residents, &mut inbox, &global,
-                    p.device, &p.data, &p.labels,
-                )?;
-                let _ = p.reply.send(out);
-            } else {
-                i += 1;
-            }
+        expire_streams(&mut expecting, &mut incoming);
+        drain_parked(
+            &mut parked, &engine, &meta, &plan, &mut states, &mut residents, &mut inbox,
+            &global, &expecting,
+        )?;
+    }
+    Ok(())
+}
+
+/// How long the worker polls for work while a checkpoint stream is
+/// expected (deadline resolution of lost-transfer detection).
+const EXPECT_POLL: Duration = Duration::from_millis(20);
+
+/// How long a registered checkpoint stream may sit without resolving
+/// before its parked batches restart from the global: the sender's whole
+/// retry budget when faults are armed, else a generous fixed window.
+fn expect_patience(faults: &Option<FaultPlan>) -> Duration {
+    match faults {
+        Some(p) => p
+            .io_timeout()
+            .saturating_mul(p.attempts.max(1))
+            .saturating_add(Duration::from_millis(
+                p.retry().backoff(p.attempts).as_millis() as u64 * p.attempts as u64,
+            )),
+        None => Duration::from_secs(30),
+    }
+}
+
+/// Drop expected streams whose deadline passed (sender died, budget
+/// exhausted): the parked batches then restart from the global, the same
+/// semantics as a lost transfer — bounded, never a hang.
+fn expire_streams(
+    expecting: &mut HashMap<u64, Instant>,
+    incoming: &mut HashMap<u64, StreamAssembler>,
+) {
+    if expecting.is_empty() {
+        return;
+    }
+    let now = Instant::now();
+    let expired: Vec<u64> = expecting
+        .iter()
+        .filter(|(_, deadline)| **deadline <= now)
+        .map(|(d, _)| *d)
+        .collect();
+    for device in expired {
+        expecting.remove(&device);
+        incoming.remove(&device);
+        crate::obs::instant(
+            "checkpoint_stream_expired",
+            &[("device", crate::obs::ArgVal::from(device))],
+        );
+    }
+}
+
+/// Serve parked batches whose checkpoint stream has resolved: landed in
+/// the inbox (FedFly resume) or died without one (the state restarts from
+/// the global, as with any lost transfer).
+#[allow(clippy::too_many_arguments)]
+fn drain_parked(
+    parked: &mut Vec<ParkedBatch>,
+    engine: &Engine,
+    meta: &ModelMeta,
+    plan: &StepPlan,
+    states: &mut HashMap<u64, ServerState>,
+    residents: &mut HashMap<u64, ResidentSrv>,
+    inbox: &mut HashMap<u64, Checkpoint>,
+    global: &Option<(u64, Vec<f32>)>,
+    expecting: &HashMap<u64, Instant>,
+) -> Result<()> {
+    let mut i = 0;
+    while i < parked.len() {
+        let device = parked[i].device;
+        let ready = states.contains_key(&device)
+            || inbox.contains_key(&device)
+            || !expecting.contains_key(&device);
+        if ready {
+            let p = parked.remove(i);
+            om::PARKED_BATCHES.add(-1);
+            let out = edge_server_step(
+                engine, meta, plan, states, residents, inbox, global, p.device, &p.data,
+                &p.labels,
+            )?;
+            let _ = p.reply.send(out);
+        } else {
+            i += 1;
         }
     }
     Ok(())
@@ -584,55 +731,110 @@ fn begin_checkpoint_stream(
     dest: SocketAddr,
     ck: Checkpoint,
     base: Option<DeltaBase>,
+    faults: Option<FaultPlan>,
 ) -> Result<()> {
     let enc = encode_for_transfer(&ck, base.as_ref(), Some(ZSTD_LEVEL))?;
     let device = ck.device_id;
+    let round = ck.round;
     om::MIGRATIONS_TOTAL.inc();
     om::MIGRATION_WIRE_BYTES_TOTAL.add(enc.blob.len() as u64);
     om::MIGRATION_FULL_BYTES_TOTAL.add(ck.wire_bytes() as u64);
     if enc.used_delta {
         om::MIGRATION_DELTA_TOTAL.inc();
     }
-    let mut peer = TcpStream::connect(dest)?;
-    peer.set_nodelay(true)?;
-    write_msg(
-        &mut peer,
-        &Msg::CheckpointBegin {
-            device,
-            total_len: enc.blob.len() as u64,
-        },
-    )?;
-    match read_msg(&mut peer)? {
-        Msg::Ack { code: 0 } => {}
-        other => {
-            return Err(Error::Proto(format!(
-                "destination rejected checkpoint stream: {other:?}"
-            )))
-        }
-    }
+    // The registering Begin is synchronous and clean (never injected):
+    // the destination must be parking this device's batches before the
+    // caller acks the MoveNotice, or an early batch could restart.
+    let io_timeout = faults.as_ref().map(|p| p.io_timeout());
+    let (peer, offset) = open_stream(dest, device, enc.blob.len(), io_timeout)?;
     // The full checkpoint is kept only when a delta went out, for the
     // Ack-5 fall-back-to-full retry.
     let fallback = if enc.used_delta { Some(ck) } else { None };
     std::thread::spawn(move || {
         let _span = crate::span!("checkpoint_stream", device = device);
-        if let Err(e) = stream_checkpoint_chunks(&mut peer, device, &enc.blob, fallback) {
+        if let Err(e) = stream_checkpoint_resilient(
+            dest, peer, offset, device, round, &enc.blob, fallback, faults,
+        ) {
             crate::error!("checkpoint stream to {dest} failed: {e}");
         }
-        let _ = write_msg(&mut peer, &Msg::Bye);
     });
     Ok(())
 }
 
-/// Stream an encoded blob as chunks; on the destination's Ack-5 ("delta
-/// base missing") answer, re-encode full and re-stream on the same
-/// connection.
-fn stream_checkpoint_chunks(
-    peer: &mut TcpStream,
+/// Connect to `dest` and register (or re-register) a checkpoint stream of
+/// `total` bytes for `device`.  Returns the connection plus the offset to
+/// stream from: 0 on a fresh stream, or the destination's last good byte
+/// when it offers to resume a partial one (reconnect after a fault).
+fn open_stream(
+    dest: SocketAddr,
     device: u64,
+    total: usize,
+    io_timeout: Option<Duration>,
+) -> Result<(TcpStream, usize)> {
+    let mut peer = TcpStream::connect(dest)?;
+    peer.set_nodelay(true)?;
+    if let Some(t) = io_timeout {
+        peer.set_read_timeout(Some(t))?;
+        peer.set_write_timeout(Some(t))?;
+    }
+    write_msg(
+        &mut peer,
+        &Msg::CheckpointBegin {
+            device,
+            total_len: total as u64,
+        },
+    )?;
+    let offset = match read_msg(&mut peer)? {
+        Msg::Ack { code: 0 } => 0,
+        Msg::CheckpointResume {
+            device: d,
+            received,
+        } if d == device && received as usize <= total => received as usize,
+        other => {
+            return Err(Error::Proto(format!(
+                "destination rejected checkpoint stream: {other:?}"
+            )))
+        }
+    };
+    Ok((peer, offset))
+}
+
+/// Drive one checkpoint blob to the destination through the fault
+/// injector, reconnecting and resuming on interruptions within the plan's
+/// retry budget; then handle the destination's Ack-5 ("delta base
+/// missing") answer by re-streaming a full frame the same way.
+#[allow(clippy::too_many_arguments)]
+fn stream_checkpoint_resilient(
+    dest: SocketAddr,
+    peer: TcpStream,
+    offset: usize,
+    device: u64,
+    round: u64,
     blob: &[u8],
     fallback: Option<Checkpoint>,
+    faults: Option<FaultPlan>,
 ) -> Result<()> {
-    match stream_chunks(peer, device, blob)? {
+    // One injector for the whole logical stream — retries included — so
+    // the schedule is a pure function of (spec, fault seed, device,
+    // round) regardless of thread timing.
+    let mut inj = match &faults {
+        Some(p) => FaultInjector::for_stream(p.spec, p.seed, faultsim::mix(device, round)),
+        None => FaultInjector::inert(),
+    };
+    let policy = match &faults {
+        Some(p) => p.retry(),
+        None => RetryPolicy::new(1, Duration::ZERO),
+    };
+    let io_timeout = faults.as_ref().map(|p| p.io_timeout());
+    match deliver_blob(
+        dest,
+        Some((peer, offset)),
+        device,
+        blob,
+        &policy,
+        io_timeout,
+        &mut inj,
+    )? {
         0 => Ok(()),
         5 => {
             let ck = fallback.ok_or_else(|| {
@@ -641,62 +843,161 @@ fn stream_checkpoint_chunks(
             om::MIGRATION_DELTA_FALLBACK_TOTAL.inc();
             let retry = encode_for_transfer(&ck, None, Some(ZSTD_LEVEL))?;
             om::MIGRATION_WIRE_BYTES_TOTAL.add(retry.blob.len() as u64);
-            write_msg(
-                peer,
-                &Msg::CheckpointBegin {
-                    device,
-                    total_len: retry.blob.len() as u64,
-                },
-            )?;
-            match read_msg(peer)? {
-                Msg::Ack { code: 0 } => {}
-                other => {
-                    return Err(Error::Proto(format!(
-                        "destination rejected checkpoint retry: {other:?}"
-                    )))
-                }
-            }
-            match stream_chunks(peer, device, &retry.blob)? {
+            match deliver_blob(dest, None, device, &retry.blob, &policy, io_timeout, &mut inj)? {
                 0 => Ok(()),
-                c => Err(Error::Proto(format!(
-                    "checkpoint retry rejected (code {c})"
-                ))),
+                c => Err(Error::Proto(format!("checkpoint retry rejected (code {c})"))),
             }
         }
-        c => Err(Error::Proto(format!(
-            "checkpoint stream rejected (code {c})"
-        ))),
+        c => Err(Error::Proto(format!("checkpoint stream rejected (code {c})"))),
     }
 }
 
-/// Send `blob` as `CheckpointChunk` frames, reading the per-chunk ack the
-/// destination's connection handler relays back; returns the final ack.
-fn stream_chunks(peer: &mut TcpStream, device: u64, blob: &[u8]) -> Result<u32> {
-    let total = blob.chunks(DEFAULT_CHUNK_BYTES).count();
-    for (i, chunk) in blob.chunks(DEFAULT_CHUNK_BYTES).enumerate() {
-        write_msg(
-            peer,
-            &Msg::CheckpointChunk {
-                device,
-                data: chunk.to_vec(),
+/// Outcome of streaming the chunks of one connection attempt.
+enum ChunkOutcome {
+    /// The destination resolved the stream with this final ack code.
+    Code(u32),
+    /// The attempt died mid-stream (injected drop/disconnect/truncate);
+    /// the caller reconnects and resumes from the destination's offset.
+    Interrupted,
+}
+
+/// Deliver `blob` within the retry budget: each attempt (re)opens the
+/// stream — honoring the destination's resume offset — and streams chunks
+/// through the injector.  Returns the destination's final resolution code
+/// (0 landed, 5 delta base missing) or `RetriesExhausted`.
+fn deliver_blob(
+    dest: SocketAddr,
+    initial: Option<(TcpStream, usize)>,
+    device: u64,
+    blob: &[u8],
+    policy: &RetryPolicy,
+    io_timeout: Option<Duration>,
+    inj: &mut FaultInjector,
+) -> Result<u32> {
+    let mut conn = initial;
+    for attempt in 0..policy.attempts {
+        policy.wait(attempt);
+        let (mut peer, offset) = match conn.take() {
+            Some(c) => c,
+            None => match open_stream(dest, device, blob.len(), io_timeout) {
+                Ok(c) => c,
+                Err(_) if attempt + 1 < policy.attempts => continue,
+                Err(e) => return Err(e),
             },
-        )?;
-        let code = match read_msg(peer)? {
-            Msg::Ack { code } => code,
-            other => {
-                return Err(Error::Proto(format!("expected chunk ack, got {other:?}")))
-            }
         };
-        if i + 1 == total {
-            return Ok(code);
+        match stream_chunks_faulty(&mut peer, device, blob, offset, inj) {
+            Ok(ChunkOutcome::Code(0)) => {
+                if attempt > 0 {
+                    om::RECOVERIES_TOTAL.inc();
+                }
+                let _ = write_msg(&mut peer, &Msg::Bye);
+                return Ok(0);
+            }
+            // Delta base missing: resolved by the caller on a fresh
+            // stream; not a fault, so it does not consume the budget.
+            Ok(ChunkOutcome::Code(5)) => return Ok(5),
+            // Any other resolution (corrupt push, stray chunk) or an
+            // interruption: reconnect — the destination offers resume for
+            // partial streams and a fresh start otherwise.
+            Ok(ChunkOutcome::Code(_)) | Ok(ChunkOutcome::Interrupted) => {}
+            Err(_) if attempt + 1 < policy.attempts => {}
+            Err(e) => return Err(e),
         }
-        if code != 0 {
-            return Err(Error::Proto(format!(
-                "checkpoint chunk rejected (code {code})"
-            )));
+    }
+    Err(Error::RetriesExhausted {
+        what: format!("checkpoint stream of device {device} to {dest}"),
+        attempts: policy.attempts,
+    })
+}
+
+/// Send `blob[offset..]` as `CheckpointChunk` frames through the fault
+/// injector, reading the per-chunk ack the destination's connection
+/// handler relays back.
+fn stream_chunks_faulty(
+    peer: &mut TcpStream,
+    device: u64,
+    blob: &[u8],
+    offset: usize,
+    inj: &mut FaultInjector,
+) -> Result<ChunkOutcome> {
+    let tail = &blob[offset.min(blob.len())..];
+    if tail.is_empty() {
+        return Err(Error::Proto("empty checkpoint stream".into()));
+    }
+    let total = tail.chunks(DEFAULT_CHUNK_BYTES).count();
+    for (i, chunk) in tail.chunks(DEFAULT_CHUNK_BYTES).enumerate() {
+        let last = i + 1 == total;
+        let mut acks_expected = 1usize;
+        match inj.next_fault() {
+            None => write_chunk(peer, device, chunk)?,
+            Some(FaultKind::Delay) => {
+                std::thread::sleep(inj.delay());
+                write_chunk(peer, device, chunk)?;
+            }
+            Some(FaultKind::Drop) => {
+                // The frame vanishes in transit: nothing arrives, no ack
+                // will come.  Surface as an interruption (dropping the
+                // connection) so the caller reconnects and resumes.
+                return Ok(ChunkOutcome::Interrupted);
+            }
+            Some(FaultKind::Disconnect) => {
+                let _ = peer.shutdown(std::net::Shutdown::Both);
+                return Ok(ChunkOutcome::Interrupted);
+            }
+            Some(FaultKind::Truncate) => {
+                // A good prefix lands, then the connection dies; the
+                // destination keeps the prefix and resumes mid-chunk.
+                let cut = inj.draw_index(chunk.len());
+                let _ = write_chunk(peer, device, &chunk[..cut]);
+                let _ = peer.shutdown(std::net::Shutdown::Both);
+                return Ok(ChunkOutcome::Interrupted);
+            }
+            Some(FaultKind::Corrupt) => {
+                let mut bad = chunk.to_vec();
+                if !bad.is_empty() {
+                    let at = inj.draw_index(bad.len());
+                    bad[at] ^= 0x40;
+                }
+                write_msg(peer, &Msg::CheckpointChunk { device, data: bad })?;
+            }
+            Some(FaultKind::Duplicate) => {
+                write_chunk(peer, device, chunk)?;
+                write_chunk(peer, device, chunk)?;
+                acks_expected = 2;
+            }
+        }
+        let mut codes = [0u32; 2];
+        for code in codes.iter_mut().take(acks_expected) {
+            *code = match read_msg(peer)? {
+                Msg::Ack { code } => code,
+                other => {
+                    return Err(Error::Proto(format!("expected chunk ack, got {other:?}")))
+                }
+            };
+        }
+        // The first ack is the authoritative resolution for the bytes we
+        // meant to send; a duplicate's second ack only reports how the
+        // destination coped with the copy.
+        let code = if acks_expected == 2 && codes[0] == 0 && !last {
+            codes[1]
+        } else {
+            codes[0]
+        };
+        if last || code != 0 {
+            return Ok(ChunkOutcome::Code(code));
         }
     }
     Err(Error::Proto("empty checkpoint stream".into()))
+}
+
+fn write_chunk(peer: &mut TcpStream, device: u64, chunk: &[u8]) -> Result<()> {
+    write_msg(
+        peer,
+        &Msg::CheckpointChunk {
+            device,
+            data: chunk.to_vec(),
+        },
+    )
 }
 
 /// Per-edge cached execution plan for `server_step`: the artifact name and
@@ -736,6 +1037,14 @@ fn materialize_server(
         st.momentum = engine.download_f32(&r.momentum)?;
     }
     Ok(())
+}
+
+/// Pop the next output of an executed artifact, with a typed error
+/// instead of a panic when it returned fewer outputs than the plan
+/// expects (corrupted artifact, wrong variant).
+fn pop_out<T>(out: &mut Vec<T>, what: &str) -> Result<T> {
+    out.pop()
+        .ok_or_else(|| Error::State(format!("step output missing: {what}")))
 }
 
 /// Execute the edge-side training step for one smashed batch.
@@ -781,7 +1090,9 @@ fn edge_server_step(
         // §Perf L6: train on the resident mirror; only the gradient and
         // loss come back to the host (the wire needs both every batch).
         if !residents.contains_key(&device) {
-            let st = &states[&device];
+            let st = states
+                .get(&device)
+                .ok_or_else(|| Error::State(format!("server state missing for device {device}")))?;
             residents.insert(
                 device,
                 ResidentSrv {
@@ -792,15 +1103,19 @@ fn edge_server_step(
         }
         let x = engine.upload_f32(smashed, &plan.smash_shape)?;
         let y = engine.upload_i32(&labels, &[plan.batch])?;
-        let r = residents.get_mut(&device).unwrap();
+        let r = residents
+            .get_mut(&device)
+            .ok_or_else(|| Error::State(format!("resident mirror missing for device {device}")))?;
         let mut out = engine.execute_resident(&plan.name, &[&r.params, &r.momentum, &x, &y])?;
-        let loss = engine.download_f32(&out.pop().unwrap())?[0];
-        let grad = engine.download_f32(&out.pop().unwrap())?;
-        r.momentum = out.pop().unwrap();
-        r.params = out.pop().unwrap();
+        let loss = engine.download_f32(&pop_out(&mut out, "loss")?)?[0];
+        let grad = engine.download_f32(&pop_out(&mut out, "smashed gradient")?)?;
+        r.momentum = pop_out(&mut out, "momentum")?;
+        r.params = pop_out(&mut out, "params")?;
         (grad, loss)
     } else {
-        let st = states.get_mut(&device).unwrap();
+        let st = states
+            .get_mut(&device)
+            .ok_or_else(|| Error::State(format!("server state missing for device {device}")))?;
         let mut out = engine.execute(
             &plan.name,
             &[
@@ -810,13 +1125,15 @@ fn edge_server_step(
                 HostTensor::i32(&labels, vec![plan.batch]),
             ],
         )?;
-        let loss = out.pop().unwrap()[0];
-        let grad = out.pop().unwrap();
-        st.momentum = out.pop().unwrap();
-        st.params = out.pop().unwrap();
+        let loss = pop_out(&mut out, "loss")?[0];
+        let grad = pop_out(&mut out, "smashed gradient")?;
+        st.momentum = pop_out(&mut out, "momentum")?;
+        st.params = pop_out(&mut out, "params")?;
         (grad, loss)
     };
-    let st = states.get_mut(&device).unwrap();
+    let st = states
+        .get_mut(&device)
+        .ok_or_else(|| Error::State(format!("server state missing for device {device}")))?;
     st.last_grad_smashed = grad.clone();
     st.last_loss = loss;
     st.batches_done += 1;
@@ -831,7 +1148,6 @@ fn edge_server_step(
 /// replies back over the socket.
 fn handle_edge_conn(mut stream: TcpStream, work_tx: mpsc::Sender<Work>) -> Result<()> {
     stream.set_nodelay(true)?;
-    let mut next_round: u64 = 0;
     loop {
         let msg = match read_msg(&mut stream) {
             Ok(m) => m,
@@ -851,20 +1167,22 @@ fn handle_edge_conn(mut stream: TcpStream, work_tx: mpsc::Sender<Work>) -> Resul
                     },
                 )?;
             }
-            Msg::Resume { .. } => {
+            Msg::Resume { round, .. } => {
+                // The wanted round comes off the wire, not from a
+                // per-connection cursor: a device that reconnected
+                // mid-round (fault recovery, migration) must never be
+                // served a stale broadcast, or recovered runs would
+                // diverge bit-wise from fault-free ones.
                 let (tx, rx) = mpsc::channel();
                 work_tx
                     .send(Work::Resume {
-                        wanted: next_round,
+                        wanted: round,
                         reply: tx,
                     })
                     .map_err(|_| Error::Proto("edge worker gone".into()))?;
                 let reply = rx
                     .recv()
                     .map_err(|_| Error::Proto("edge worker dropped reply".into()))?;
-                if let Msg::GlobalParams { round, .. } = &reply {
-                    next_round = round + 1;
-                }
                 write_msg(&mut stream, &reply)?;
             }
             Msg::Bye => return Ok(()),
@@ -928,6 +1246,10 @@ pub struct DeviceConfig {
     /// Keep the device half resident in PJRT buffers across each local
     /// epoch (EXPERIMENTS.md §Perf L6); bit-identical either way.
     pub resident: bool,
+    /// Deterministic fault injection on the device's idempotent RPCs
+    /// (`MoveNotice`, `LocalUpdate`) plus the matching bounded-retry
+    /// recovery (`faultsim`).  `None` = reliable network.
+    pub faults: Option<FaultPlan>,
 }
 
 /// Per-run device result.
@@ -956,16 +1278,13 @@ pub fn run_device(
     };
     let mut rng = Rng::new(cfg.rng_seed);
     let mut edge = cfg.initial_edge;
-    let mut conn = TcpStream::connect(cfg.edges[edge])?;
-    conn.set_nodelay(true)?;
-    write_msg(
-        &mut conn,
-        &Msg::Hello {
-            role: "device".into(),
-            id: cfg.id,
-        },
-    )?;
-    expect_ack(&mut conn)?;
+    let mut conn = connect_device(cfg.edges[edge], cfg.id)?;
+    // One injector covers every fault-susceptible RPC this device makes,
+    // so the schedule is a pure function of (spec, fault seed, device).
+    let mut rpc_inj = match &cfg.faults {
+        Some(p) => FaultInjector::for_stream(p.spec, p.seed, faultsim::mix(0xDE1CE, cfg.id)),
+        None => FaultInjector::inert(),
+    };
 
     let mut dev: Option<DeviceState> = None;
     let mut loss_sum = 0.0f64;
@@ -987,28 +1306,35 @@ pub fn run_device(
         // Mobility at the round boundary (paper Step 6').
         if let Some(&(_, dest)) = cfg.moves.iter().find(|(r, _)| *r == round) {
             if dest != edge {
-                let t0 = std::time::Instant::now();
+                let t0 = Instant::now();
                 if cfg.strategy == Strategy::FedFly {
-                    write_msg(
+                    // Idempotent under retry: a re-sent MoveNotice after
+                    // the first one actually landed answers code 4
+                    // ("nothing to migrate") — accepted when faults are
+                    // armed, since the state is already on its way.  Code
+                    // 3 (source-side stream setup failed) degrades to the
+                    // restart-from-global path, also acceptable then.
+                    let accept: fn(u32) -> bool = if cfg.faults.is_some() {
+                        |code| matches!(code, 0 | 3 | 4)
+                    } else {
+                        |code| code == 0
+                    };
+                    rpc_with_retry(
                         &mut conn,
+                        cfg.edges[edge],
+                        cfg.id,
                         &Msg::MoveNotice {
                             device: cfg.id,
                             dest_edge: dest as u64,
                         },
+                        "move notice",
+                        &cfg.faults,
+                        &mut rpc_inj,
+                        accept,
                     )?;
-                    expect_ack(&mut conn)?;
                 }
                 let _ = write_msg(&mut conn, &Msg::Bye);
-                conn = TcpStream::connect(cfg.edges[dest])?;
-                conn.set_nodelay(true)?;
-                write_msg(
-                    &mut conn,
-                    &Msg::Hello {
-                        role: "device".into(),
-                        id: cfg.id,
-                    },
-                )?;
-                expect_ack(&mut conn)?;
+                conn = connect_device(cfg.edges[dest], cfg.id)?;
                 edge = dest;
                 migrations += 1;
                 migration_seconds += t0.elapsed().as_secs_f64();
@@ -1016,7 +1342,13 @@ pub fn run_device(
         }
 
         // Fetch this round's global parameters (paper Steps 1/6).
-        write_msg(&mut conn, &Msg::Resume { device: cfg.id })?;
+        write_msg(
+            &mut conn,
+            &Msg::Resume {
+                device: cfg.id,
+                round,
+            },
+        )?;
         let (_, params) = match read_msg(&mut conn)? {
             Msg::GlobalParams { round, params } => (round, params),
             other => return Err(Error::Proto(format!("expected params, got {other:?}"))),
@@ -1025,7 +1357,9 @@ pub fn run_device(
             Some(d) => d.refresh_from_global(&params),
             None => dev = Some(DeviceState::from_global(&meta, cfg.sp, &params)?),
         }
-        let dev_state = dev.as_mut().unwrap();
+        let dev_state = dev
+            .as_mut()
+            .ok_or_else(|| Error::State("device state not initialized".into()))?;
 
         // One local epoch (paper Steps 2/3).  With resident buffers the
         // device half lives in PJRT buffers for the whole epoch (§Perf
@@ -1044,20 +1378,19 @@ pub fn run_device(
             let mut x_res = None;
             let smashed = if let Some(p) = res_params.as_ref() {
                 let xr = engine.upload_f32(&x, &[cfg.batch, 32, 32, 3])?;
-                let s = engine.execute_resident(&fwd, &[p, &xr])?.pop().unwrap();
+                let mut out = engine.execute_resident(&fwd, &[p, &xr])?;
+                let s = pop_out(&mut out, "smashed activation")?;
                 x_res = Some(xr);
                 engine.download_f32(&s)?
             } else {
-                engine
-                    .execute(
-                        &fwd,
-                        &[
-                            HostTensor::f32(&dev_state.params, vec![dev_state.params.len()]),
-                            HostTensor::f32(&x, vec![cfg.batch, 32, 32, 3]),
-                        ],
-                    )?
-                    .pop()
-                    .unwrap()
+                let mut out = engine.execute(
+                    &fwd,
+                    &[
+                        HostTensor::f32(&dev_state.params, vec![dev_state.params.len()]),
+                        HostTensor::f32(&x, vec![cfg.batch, 32, 32, 3]),
+                    ],
+                )?;
+                pop_out(&mut out, "smashed activation")?
             };
             write_msg(
                 &mut conn,
@@ -1076,8 +1409,8 @@ pub fn run_device(
             {
                 let gr = engine.upload_f32(&grad, &smash_shape)?;
                 let mut out = engine.execute_resident(&bwd, &[&p, &m, &xr, &gr])?;
-                res_momentum = Some(out.pop().unwrap());
-                res_params = Some(out.pop().unwrap());
+                res_momentum = Some(pop_out(&mut out, "momentum")?);
+                res_params = Some(pop_out(&mut out, "params")?);
             } else {
                 let mut out = engine.execute(
                     &bwd,
@@ -1088,8 +1421,8 @@ pub fn run_device(
                         HostTensor::f32(&grad, smash_shape.clone()),
                     ],
                 )?;
-                dev_state.momentum = out.pop().unwrap();
-                dev_state.params = out.pop().unwrap();
+                dev_state.momentum = pop_out(&mut out, "momentum")?;
+                dev_state.params = pop_out(&mut out, "params")?;
             }
             loss_sum += loss as f64;
             last_loss = loss;
@@ -1101,16 +1434,23 @@ pub fn run_device(
             dev_state.momentum = engine.download_f32(&m)?;
         }
 
-        // Send the device half upstream (paper Step 4).
-        write_msg(
+        // Send the device half upstream (paper Step 4).  Idempotent under
+        // retry: the edge deduplicates on (device, round).
+        rpc_with_retry(
             &mut conn,
+            cfg.edges[edge],
+            cfg.id,
             &Msg::LocalUpdate {
                 device: cfg.id,
+                round,
                 weight: shard.len().max(1) as f64,
                 params: dev_state.params.clone(),
             },
+            "local update",
+            &cfg.faults,
+            &mut rpc_inj,
+            |code| code == 0,
         )?;
-        expect_ack(&mut conn)?;
     }
     let _ = write_msg(&mut conn, &Msg::Bye);
     Ok(DeviceRunStats {
@@ -1132,6 +1472,136 @@ fn expect_ack(conn: &mut TcpStream) -> Result<()> {
         Msg::Ack { code: 0 } => Ok(()),
         other => Err(Error::Proto(format!("expected ack, got {other:?}"))),
     }
+}
+
+/// Connect to an edge and introduce ourselves as `device`.
+fn connect_device(addr: SocketAddr, device: u64) -> Result<TcpStream> {
+    let mut conn = TcpStream::connect(addr)?;
+    conn.set_nodelay(true)?;
+    write_msg(
+        &mut conn,
+        &Msg::Hello {
+            role: "device".into(),
+            id: device,
+        },
+    )?;
+    expect_ack(&mut conn)?;
+    Ok(conn)
+}
+
+/// Send one idempotent RPC and read its ack, surviving injected faults.
+///
+/// Without a fault plan this is a plain write + ack.  With one, each send
+/// event draws from the device's injector — the frame may be dropped,
+/// delayed, duplicated, mangled (corrupt/truncate kill the connection at
+/// the edge's reader) or the connection cut — and the ack read runs under
+/// the plan's timeout.  Any failure reconnects and re-sends within the
+/// bounded retry budget; `accept` decides which ack codes count as
+/// success (e.g. code 4 for a MoveNotice whose first copy already
+/// landed).  The read timeout is always cleared before returning so the
+/// blocking Smashed/Resume reads are unaffected.
+#[allow(clippy::too_many_arguments)]
+fn rpc_with_retry(
+    conn: &mut TcpStream,
+    edge_addr: SocketAddr,
+    device: u64,
+    msg: &Msg,
+    what: &str,
+    faults: &Option<FaultPlan>,
+    inj: &mut FaultInjector,
+    accept: impl Fn(u32) -> bool,
+) -> Result<()> {
+    let Some(plan) = faults else {
+        write_msg(conn, msg)?;
+        return match read_msg(conn)? {
+            Msg::Ack { code } if accept(code) => Ok(()),
+            other => Err(Error::Proto(format!("{what}: expected ack, got {other:?}"))),
+        };
+    };
+    let policy = plan.retry();
+    let _ = conn.set_read_timeout(Some(plan.io_timeout()));
+    let clear = |conn: &mut TcpStream| {
+        let _ = conn.set_read_timeout(None);
+    };
+    for attempt in 0..policy.attempts {
+        policy.wait(attempt);
+        // How many copies of the frame actually went out (0 = the edge
+        // sees nothing or garbage; the ack read below then times out or
+        // fails fast, driving the reconnect).
+        let sent: Result<usize> = match inj.next_fault() {
+            None => write_msg(conn, msg).map(|_| 1),
+            Some(FaultKind::Delay) => {
+                std::thread::sleep(inj.delay());
+                write_msg(conn, msg).map(|_| 1)
+            }
+            Some(FaultKind::Duplicate) => write_msg(conn, msg)
+                .and_then(|_| write_msg(conn, msg))
+                .map(|_| 2),
+            Some(FaultKind::Drop) => Ok(0),
+            Some(FaultKind::Disconnect) => {
+                let _ = conn.shutdown(std::net::Shutdown::Both);
+                Ok(0)
+            }
+            Some(FaultKind::Corrupt) | Some(FaultKind::Truncate) => {
+                // A mangled frame kills the connection at the edge's
+                // reader (bad magic / short read); emulate with garbage.
+                use std::io::Write;
+                let _ = conn.write_all(&[0u8; 8]).and_then(|_| conn.flush());
+                Ok(0)
+            }
+        };
+        let mut landed = false;
+        match sent {
+            Err(_) => {}
+            Ok(copies) => {
+                // Read one ack per copy sent — at least one read, so a
+                // lost frame surfaces as a timeout here.
+                let mut failed = false;
+                for _ in 0..copies.max(1) {
+                    match read_msg(conn) {
+                        Ok(Msg::Ack { code }) if accept(code) => landed = true,
+                        Ok(Msg::Ack { code }) => {
+                            clear(conn);
+                            return Err(Error::Proto(format!(
+                                "{what}: edge rejected with ack code {code}"
+                            )));
+                        }
+                        Ok(other) => {
+                            clear(conn);
+                            return Err(Error::Proto(format!(
+                                "{what}: expected ack, got {other:?}"
+                            )));
+                        }
+                        Err(_) => {
+                            failed = true;
+                            break;
+                        }
+                    }
+                }
+                landed = landed && !failed;
+            }
+        }
+        if landed {
+            if attempt > 0 {
+                om::RECOVERIES_TOTAL.inc();
+            }
+            clear(conn);
+            return Ok(());
+        }
+        if attempt + 1 < policy.attempts {
+            // Re-establish the connection for the next attempt; a failed
+            // reconnect just consumes another attempt.
+            if let Ok(mut fresh) = connect_device(edge_addr, device) {
+                let _ = fresh.set_read_timeout(Some(plan.io_timeout()));
+                *conn = fresh;
+            }
+        }
+    }
+    clear(conn);
+    Err(Error::RetriesExhausted {
+        what: format!("{what} from device {device}"),
+        attempts: policy.attempts,
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -1183,6 +1653,7 @@ pub fn run_in_threads(cfg: &RunConfig, manifest: Arc<Manifest>) -> Result<Distri
             cfg.sp,
             cfg.batch,
             cfg.resident_buffers,
+            cfg.faults,
         )?);
     }
 
@@ -1210,6 +1681,7 @@ pub fn run_in_threads(cfg: &RunConfig, manifest: Arc<Manifest>) -> Result<Distri
             train_samples: cfg.train_samples,
             rng_seed: root_rng.fork(d as u64).state()[0],
             resident: cfg.resident_buffers,
+            faults: cfg.faults,
         };
         let manifest = manifest.clone();
         device_threads.push(std::thread::spawn(move || run_device(dcfg, manifest)));

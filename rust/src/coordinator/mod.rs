@@ -133,7 +133,9 @@ impl Runner {
         };
 
         let mut global = GlobalModel::new(meta.init_params(cfg.seed));
-        let transport = InMemTransport::new();
+        // Fault plan (if any) rides the transport: every checkpoint send
+        // replays a deterministic per-stream schedule (`faultsim`).
+        let transport = InMemTransport::with_faults(cfg.faults);
         // FedAvg f64 accumulator, resized once and reused every round.
         let mut scratch: Vec<f64> = Vec::new();
         let mut perf = RunPerf {

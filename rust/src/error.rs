@@ -36,6 +36,12 @@ pub enum Error {
     #[error("protocol error: {0}")]
     Proto(String),
 
+    #[error("retries exhausted after {attempts} attempts: {what}")]
+    RetriesExhausted { what: String, attempts: u32 },
+
+    #[error("state error: {0}")]
+    State(String),
+
     #[error("config error: {0}")]
     Config(String),
 

@@ -1,0 +1,447 @@
+//! Deterministic fault injection for the migration paths.
+//!
+//! Edge mobility means flaky links: frames drop, stall, duplicate,
+//! truncate, corrupt, and connections die mid-stream.  This module
+//! expresses those faults as a seeded, replayable schedule so the chaos
+//! suite (`tests/integration_chaos.rs`) can prove the recovery logic —
+//! bounded retries, stream resume, typed errors — is *bit-exact*: a run
+//! that survives injected faults produces the same final global model as
+//! the fault-free run at the same training seed.
+//!
+//! Determinism does not depend on thread interleaving: every logical
+//! stream (a checkpoint transfer, a device's RPC connection) derives its
+//! own [`FaultInjector`] from `mix(seed, stream_id)` and draws from it
+//! sequentially, so the schedule for a stream is a pure function of
+//! `(spec, seed, stream_id)` — replay any failure with the same
+//! `--fault-seed`.
+
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::obs::metric::wellknown as om;
+use crate::util::Rng;
+
+/// One injected fault, applied to a frame or a connection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The frame never arrives (the receiver sees silence, then timeout).
+    Drop,
+    /// The frame arrives late by [`FaultSpec::delay_ms`].
+    Delay,
+    /// The frame arrives twice.
+    Duplicate,
+    /// Only a prefix of the frame arrives, then the connection dies.
+    Truncate,
+    /// One byte of the payload is flipped.
+    Corrupt,
+    /// The connection dies before the frame is written.
+    Disconnect,
+}
+
+impl FaultKind {
+    /// Every kind, in the order the cumulative-probability draw walks.
+    pub const ALL: [FaultKind; 6] = [
+        FaultKind::Drop,
+        FaultKind::Delay,
+        FaultKind::Duplicate,
+        FaultKind::Truncate,
+        FaultKind::Corrupt,
+        FaultKind::Disconnect,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Drop => "drop",
+            FaultKind::Delay => "delay",
+            FaultKind::Duplicate => "duplicate",
+            FaultKind::Truncate => "truncate",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Disconnect => "disconnect",
+        }
+    }
+}
+
+/// Per-class fault probabilities (per frame / per send event).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    pub drop: f64,
+    pub delay: f64,
+    pub duplicate: f64,
+    pub truncate: f64,
+    pub corrupt: f64,
+    pub disconnect: f64,
+    /// How late a delayed frame arrives.
+    pub delay_ms: u64,
+}
+
+impl FaultSpec {
+    /// No faults at all (the reliable-network default).
+    pub const NONE: FaultSpec = FaultSpec {
+        drop: 0.0,
+        delay: 0.0,
+        duplicate: 0.0,
+        truncate: 0.0,
+        corrupt: 0.0,
+        disconnect: 0.0,
+        delay_ms: 1,
+    };
+
+    /// A single-class spec: `FaultSpec::only(FaultKind::Corrupt, 0.3)`.
+    pub fn only(kind: FaultKind, p: f64) -> FaultSpec {
+        let mut s = FaultSpec::NONE;
+        match kind {
+            FaultKind::Drop => s.drop = p,
+            FaultKind::Delay => s.delay = p,
+            FaultKind::Duplicate => s.duplicate = p,
+            FaultKind::Truncate => s.truncate = p,
+            FaultKind::Corrupt => s.corrupt = p,
+            FaultKind::Disconnect => s.disconnect = p,
+        }
+        s
+    }
+
+    fn prob(&self, kind: FaultKind) -> f64 {
+        match kind {
+            FaultKind::Drop => self.drop,
+            FaultKind::Delay => self.delay,
+            FaultKind::Duplicate => self.duplicate,
+            FaultKind::Truncate => self.truncate,
+            FaultKind::Corrupt => self.corrupt,
+            FaultKind::Disconnect => self.disconnect,
+        }
+    }
+
+    /// Whether any class can fire.
+    pub fn is_active(&self) -> bool {
+        FaultKind::ALL.iter().any(|&k| self.prob(k) > 0.0)
+    }
+
+    /// Parse a CLI spec: comma-separated `class=prob` terms plus the
+    /// optional `delay_ms=N`, e.g. `"drop=0.1,corrupt=0.05,delay_ms=2"`.
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let mut spec = FaultSpec::NONE;
+        for term in s.split(',').filter(|t| !t.trim().is_empty()) {
+            let (key, val) = term
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("fault term {term:?} is not key=value")))?;
+            let key = key.trim();
+            let val = val.trim();
+            if key == "delay_ms" {
+                spec.delay_ms = val
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad delay_ms {val:?}")))?;
+                continue;
+            }
+            let p: f64 = val
+                .parse()
+                .map_err(|_| Error::Config(format!("bad fault probability {val:?}")))?;
+            match key {
+                "drop" => spec.drop = p,
+                "delay" => spec.delay = p,
+                "duplicate" => spec.duplicate = p,
+                "truncate" => spec.truncate = p,
+                "corrupt" => spec.corrupt = p,
+                "disconnect" => spec.disconnect = p,
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown fault class {other:?} (want drop/delay/duplicate/\
+                         truncate/corrupt/disconnect/delay_ms)"
+                    )))
+                }
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// The canonical spec string (`parse` round-trips it).
+    pub fn to_spec_string(&self) -> String {
+        let mut terms: Vec<String> = FaultKind::ALL
+            .iter()
+            .filter(|&&k| self.prob(k) > 0.0)
+            .map(|&k| format!("{}={}", k.name(), self.prob(k)))
+            .collect();
+        if self.delay > 0.0 {
+            terms.push(format!("delay_ms={}", self.delay_ms));
+        }
+        terms.join(",")
+    }
+
+    /// Probabilities must be in [0,1] and sum to at most 1 (one draw
+    /// decides the fault class per event).
+    pub fn validate(&self) -> Result<()> {
+        let mut sum = 0.0;
+        for k in FaultKind::ALL {
+            let p = self.prob(k);
+            if !(0.0..=1.0).contains(&p) {
+                return Err(Error::Config(format!(
+                    "fault probability {}={p} not in [0,1]",
+                    k.name()
+                )));
+            }
+            sum += p;
+        }
+        if sum > 1.0 + 1e-9 {
+            return Err(Error::Config(format!(
+                "fault probabilities sum to {sum} > 1"
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// The full fault-injection plan a run carries: the per-class spec, the
+/// schedule seed, and the recovery budget the transports honor while the
+/// plan is active.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub spec: FaultSpec,
+    /// Seed of the fault schedule — independent of the training seed so
+    /// faults never perturb data/batch randomness.
+    pub seed: u64,
+    /// Bounded-retry budget per operation (send, RPC), including the
+    /// first attempt.  Must be at least 1.
+    pub attempts: u32,
+    /// Base of the exponential backoff between attempts.
+    pub backoff_ms: u64,
+    /// Read/ack timeout on fault-susceptible sockets.
+    pub io_timeout_ms: u64,
+}
+
+impl FaultPlan {
+    pub fn new(spec: FaultSpec, seed: u64) -> FaultPlan {
+        FaultPlan {
+            spec,
+            seed,
+            attempts: 6,
+            backoff_ms: 2,
+            io_timeout_ms: 2_000,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.spec.validate()?;
+        if self.attempts == 0 {
+            return Err(Error::Config("fault plan attempts == 0".into()));
+        }
+        Ok(())
+    }
+
+    /// The retry policy this plan grants an operation.
+    pub fn retry(&self) -> RetryPolicy {
+        RetryPolicy {
+            attempts: self.attempts,
+            base_backoff: Duration::from_millis(self.backoff_ms),
+        }
+    }
+
+    pub fn io_timeout(&self) -> Duration {
+        Duration::from_millis(self.io_timeout_ms.max(1))
+    }
+}
+
+/// Mix a stream id into the plan seed (SplitMix64 finalizer) so each
+/// logical stream draws from an independent, reproducible schedule.
+pub fn mix(seed: u64, stream_id: u64) -> u64 {
+    let mut z = seed ^ stream_id.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A per-stream fault schedule: one uniform draw per event decides which
+/// class (if any) fires, so the schedule is a pure function of
+/// `(spec, seed, stream_id)` regardless of thread interleaving.
+pub struct FaultInjector {
+    spec: FaultSpec,
+    rng: Rng,
+    injected: u64,
+}
+
+impl FaultInjector {
+    pub fn for_stream(spec: FaultSpec, seed: u64, stream_id: u64) -> FaultInjector {
+        FaultInjector {
+            spec,
+            rng: Rng::new(mix(seed, stream_id)),
+            injected: 0,
+        }
+    }
+
+    /// An injector that never fires (used when no plan is configured).
+    pub fn inert() -> FaultInjector {
+        FaultInjector::for_stream(FaultSpec::NONE, 0, 0)
+    }
+
+    /// Decide the fault for the next event.  Exactly one RNG draw per
+    /// call whether or not a fault fires.
+    pub fn next_fault(&mut self) -> Option<FaultKind> {
+        if !self.spec.is_active() {
+            return None;
+        }
+        let x = self.rng.next_f64();
+        let mut cum = 0.0;
+        for k in FaultKind::ALL {
+            cum += self.spec.prob(k);
+            if x < cum {
+                self.injected += 1;
+                om::FAULTS_INJECTED_TOTAL.inc();
+                return Some(k);
+            }
+        }
+        None
+    }
+
+    /// Uniform index in `[0, n)` from the same stream (corruption offset,
+    /// truncation point).  Deterministic for the stream like `next_fault`.
+    pub fn draw_index(&mut self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        self.rng.below(n)
+    }
+
+    /// How late a delayed frame arrives.
+    pub fn delay(&self) -> Duration {
+        Duration::from_millis(self.spec.delay_ms.max(1))
+    }
+
+    /// Faults fired so far on this stream.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+}
+
+/// Bounded retry with exponential backoff.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first.
+    pub attempts: u32,
+    pub base_backoff: Duration,
+}
+
+impl RetryPolicy {
+    pub fn new(attempts: u32, base_backoff: Duration) -> RetryPolicy {
+        RetryPolicy {
+            attempts: attempts.max(1),
+            base_backoff,
+        }
+    }
+
+    /// Backoff before retry number `attempt` (1-based; attempt 0 is the
+    /// initial try and never sleeps).  Doubles per retry, capped at 256x
+    /// so a misconfigured budget cannot stall a test run.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        if attempt == 0 {
+            return Duration::ZERO;
+        }
+        let factor = 1u32 << (attempt - 1).min(8);
+        self.base_backoff.saturating_mul(factor)
+    }
+
+    /// Sleep the backoff for `attempt` and count the retry.
+    pub fn wait(&self, attempt: u32) {
+        if attempt > 0 {
+            om::RETRIES_TOTAL.inc();
+            let d = self.backoff(attempt);
+            if !d.is_zero() {
+                std::thread::sleep(d);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_and_validation() {
+        let s = FaultSpec::parse("drop=0.1,corrupt=0.05,delay=0.2,delay_ms=3").unwrap();
+        assert_eq!(s.drop, 0.1);
+        assert_eq!(s.corrupt, 0.05);
+        assert_eq!(s.delay, 0.2);
+        assert_eq!(s.delay_ms, 3);
+        assert!(s.is_active());
+        let back = FaultSpec::parse(&s.to_spec_string()).unwrap();
+        assert_eq!(s, back);
+
+        assert!(!FaultSpec::parse("").unwrap().is_active());
+        assert!(FaultSpec::parse("drop").is_err());
+        assert!(FaultSpec::parse("warp=0.1").is_err());
+        assert!(FaultSpec::parse("drop=2.0").is_err());
+        assert!(FaultSpec::parse("drop=0.6,corrupt=0.6").is_err());
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_stream() {
+        let spec = FaultSpec::parse("drop=0.2,corrupt=0.2,disconnect=0.1").unwrap();
+        let schedule = |stream: u64| -> Vec<Option<FaultKind>> {
+            let mut inj = FaultInjector::for_stream(spec, 42, stream);
+            (0..64).map(|_| inj.next_fault()).collect()
+        };
+        // same (seed, stream) -> identical schedule
+        assert_eq!(schedule(7), schedule(7));
+        // different streams -> independent schedules
+        assert_ne!(schedule(7), schedule(8));
+        // different seed -> different schedule
+        let mut other = FaultInjector::for_stream(spec, 43, 7);
+        let b: Vec<Option<FaultKind>> = (0..64).map(|_| other.next_fault()).collect();
+        assert_ne!(schedule(7), b);
+    }
+
+    #[test]
+    fn probability_one_always_fires_and_zero_never() {
+        let mut always = FaultInjector::for_stream(
+            FaultSpec::only(FaultKind::Corrupt, 1.0),
+            1,
+            1,
+        );
+        for _ in 0..32 {
+            assert_eq!(always.next_fault(), Some(FaultKind::Corrupt));
+        }
+        assert_eq!(always.injected(), 32);
+
+        let mut never = FaultInjector::for_stream(FaultSpec::NONE, 1, 1);
+        for _ in 0..32 {
+            assert_eq!(never.next_fault(), None);
+        }
+        assert_eq!(never.injected(), 0);
+    }
+
+    #[test]
+    fn class_frequencies_track_probabilities() {
+        let spec = FaultSpec::parse("drop=0.3,corrupt=0.1").unwrap();
+        let mut inj = FaultInjector::for_stream(spec, 9, 0);
+        let (mut drops, mut corrupts, mut clean) = (0u32, 0u32, 0u32);
+        for _ in 0..10_000 {
+            match inj.next_fault() {
+                Some(FaultKind::Drop) => drops += 1,
+                Some(FaultKind::Corrupt) => corrupts += 1,
+                Some(_) => panic!("class with probability 0 fired"),
+                None => clean += 1,
+            }
+        }
+        assert!((2_800..3_200).contains(&drops), "drops {drops}");
+        assert!((800..1_200).contains(&corrupts), "corrupts {corrupts}");
+        assert!((5_700..6_300).contains(&clean), "clean {clean}");
+    }
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let p = RetryPolicy::new(10, Duration::from_millis(2));
+        assert_eq!(p.backoff(0), Duration::ZERO);
+        assert_eq!(p.backoff(1), Duration::from_millis(2));
+        assert_eq!(p.backoff(2), Duration::from_millis(4));
+        assert_eq!(p.backoff(4), Duration::from_millis(16));
+        // cap: attempts far beyond the budget cannot overflow the shift
+        assert_eq!(p.backoff(40), p.backoff(9));
+    }
+
+    #[test]
+    fn plan_validation() {
+        let mut plan = FaultPlan::new(FaultSpec::parse("drop=0.1").unwrap(), 1);
+        plan.validate().unwrap();
+        plan.attempts = 0;
+        assert!(plan.validate().is_err());
+    }
+}

@@ -28,6 +28,7 @@ pub mod coordinator;
 pub mod data;
 pub mod error;
 pub mod experiments;
+pub mod faultsim;
 pub mod fl;
 pub mod json;
 pub mod manifest;

@@ -25,12 +25,17 @@ fn usage() -> ! {
            train [--rounds N] [--sp K] [--batch B] [--strategy fedfly|restart]\n\
                  [--move-at FRAC] [--samples N] [--sim] [--seed S] [--workers W]\n\
                  [--full-migration] [--no-overlap] [--no-resident]\n\
+                 [--faults SPEC] [--fault-seed S]  deterministic fault injection\n\
                  [--trace-out PATH] [--no-trace]   Chrome trace + JSONL + metrics dump\n\
            fig3a | fig3b | fig3c        paper timing figures (simulated testbed)\n\
            fig4 [--frac F] [--rounds N] paper accuracy figure (real training)\n\
            overhead                     migration overhead table\n\
            multi                        simultaneous-mobility sweep (paper §VI)\n\
-           distributed [--rounds N]     threaded TCP deployment on localhost"
+           distributed [--rounds N] [--faults SPEC] [--fault-seed S]\n\
+                                        threaded TCP deployment on localhost\n\
+         fault SPEC: comma-separated class=prob terms, e.g.\n\
+           drop=0.1,corrupt=0.05,delay=0.1,delay_ms=2 (classes: drop, delay,\n\
+           duplicate, truncate, corrupt, disconnect); replay with --fault-seed"
     );
     std::process::exit(2)
 }
@@ -71,6 +76,17 @@ impl Args {
 
     fn has(&self, name: &str) -> bool {
         self.flags.contains_key(name)
+    }
+
+    /// Parse `--faults SPEC [--fault-seed S]` into a fault plan.
+    fn fault_plan(&self) -> fedfly::Result<Option<fedfly::faultsim::FaultPlan>> {
+        let spec_s: String = self.get("faults", String::new());
+        if spec_s.is_empty() {
+            return Ok(None);
+        }
+        let spec = fedfly::faultsim::FaultSpec::parse(&spec_s)?;
+        let seed = self.get("fault-seed", 1u64);
+        Ok(Some(fedfly::faultsim::FaultPlan::new(spec, seed)))
     }
 }
 
@@ -171,6 +187,7 @@ fn edge_cmd(args: &Args) -> fedfly::Result<()> {
         args.get("sp", 2usize),
         args.get("batch", 16usize),
         !args.has("no-resident"),
+        args.fault_plan()?,
     )?;
     // Serve until killed.
     fedfly::info!("edge {id}: serving (ctrl-c to stop)");
@@ -225,6 +242,7 @@ fn device_cmd(args: &Args) -> fedfly::Result<()> {
         train_samples,
         rng_seed,
         resident: !args.has("no-resident"),
+        faults: args.fault_plan()?,
     };
     let stats = fedfly::coordinator::distributed::run_device(cfg, meta.manifest.clone())?;
     println!(
@@ -281,6 +299,7 @@ fn train(args: &Args) -> fedfly::Result<()> {
     if args.has("no-resident") {
         cfg.resident_buffers = false;
     }
+    cfg.faults = args.fault_plan()?;
     let trace_out: String = args.get("trace-out", String::new());
     if !trace_out.is_empty() && !args.has("no-trace") {
         cfg.trace = true;
@@ -377,6 +396,7 @@ fn distributed_cmd(args: &Args) -> fedfly::Result<()> {
     cfg.train_samples = args.get("samples", 256usize);
     cfg.test_samples = 64;
     cfg.schedule = Schedule::at_fraction(0, 0.5, cfg.rounds, 1);
+    cfg.faults = args.fault_plan()?;
     let run = distributed::run_in_threads(&cfg, meta.manifest.clone())?;
     println!("distributed run complete; final params L2 = {:.4}",
         run.final_params.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt());

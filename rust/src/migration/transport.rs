@@ -29,6 +29,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+use crate::faultsim::{self, FaultInjector, FaultKind, FaultPlan};
 use crate::migration::codec::{
     self, decode, encode_for_transfer, Checkpoint, DeltaBase, ZSTD_LEVEL,
 };
@@ -38,6 +39,10 @@ use crate::proto::{read_msg, write_msg, Msg, MAX_PAYLOAD};
 /// Default streaming chunk size: large enough to amortize frame overhead,
 /// small enough that the receiver's incremental CRC overlaps the socket.
 pub const DEFAULT_CHUNK_BYTES: usize = 256 * 1024;
+
+/// Read timeout on a per-stream server thread: a sender that dies
+/// mid-stream releases the thread instead of pinning it forever.
+pub const SERVE_READ_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// What one checkpoint transfer cost, on the wire and on the host.
 #[derive(Clone, Copy, Debug, Default)]
@@ -56,6 +61,12 @@ pub struct TransferStats {
     pub encode_seconds: f64,
     /// Host seconds spent reassembling + decoding at the destination.
     pub decode_seconds: f64,
+    /// Faults the deterministic injector fired during this transfer.
+    pub faults_injected: u64,
+    /// Retry attempts beyond the first (each one re-streams the tail of
+    /// the blob from the last good byte, or the whole blob after
+    /// corruption).
+    pub retries: u64,
 }
 
 /// A checkpoint transfer mechanism between a source and destination edge.
@@ -103,6 +114,11 @@ impl StreamAssembler {
 
     pub fn received(&self) -> usize {
         self.buf.len()
+    }
+
+    /// The declared total stream length.
+    pub fn total(&self) -> usize {
+        self.total
     }
 
     pub fn is_complete(&self) -> bool {
@@ -185,17 +201,37 @@ pub struct InMemTransport {
     recv_bases: Mutex<HashMap<usize, DeltaBase>>,
     zstd_level: Option<i32>,
     chunk_bytes: usize,
+    /// Deterministic fault injection (`faultsim`): when set, every send
+    /// draws a per-stream fault schedule and must survive it through the
+    /// bounded-retry + resume machinery below.
+    faults: Option<FaultPlan>,
+    /// Per-(dest, device) send sequence numbers; each transfer's fault
+    /// schedule is keyed by (dest, device, seq) so it is independent of
+    /// thread interleaving across devices.
+    send_seq: Mutex<HashMap<(usize, u64), u64>>,
 }
 
 impl InMemTransport {
     pub fn new() -> Self {
+        Self::with_faults(None)
+    }
+
+    /// A transport with deterministic fault injection on every send.
+    pub fn with_faults(faults: Option<FaultPlan>) -> Self {
         InMemTransport {
             mailboxes: Mutex::new(HashMap::new()),
             send_bases: Mutex::new(HashMap::new()),
             recv_bases: Mutex::new(HashMap::new()),
             zstd_level: Some(ZSTD_LEVEL),
             chunk_bytes: DEFAULT_CHUNK_BYTES,
+            faults,
+            send_seq: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// Smaller chunks for tests that want many fault-injection points.
+    pub fn set_chunk_bytes(&mut self, chunk_bytes: usize) {
+        self.chunk_bytes = chunk_bytes.max(1);
     }
 
     /// Checkpoints queued for `device` at edge `dest`.
@@ -235,6 +271,158 @@ impl Default for InMemTransport {
     }
 }
 
+/// What one fault-injected delivery attempt achieved.
+enum Attempt {
+    /// Every byte landed; the assembler is complete.
+    Done,
+    /// The stream died mid-flight but the assembler holds a good prefix;
+    /// the next attempt resumes from `StreamAssembler::received()`.
+    Interrupted,
+    /// The assembler saw bytes it can prove are wrong; the next attempt
+    /// restarts the stream from byte zero.
+    Poisoned,
+}
+
+/// Push `blob`'s unreceived tail through the assembler, letting the
+/// injector corrupt the stream.  Fault-caused assembler errors map to
+/// [`Attempt::Poisoned`] (restart), clean-path failures to `Err`.
+/// `tainted` records that undetected-so-far corruption entered the
+/// assembler (a flipped byte or a duplicated chunk); the caller treats a
+/// finish/decode failure as recoverable while it is set.
+fn push_attempt(
+    blob: &[u8],
+    asm_slot: &mut Option<StreamAssembler>,
+    tainted: &mut bool,
+    chunk_bytes: usize,
+    inj: &mut FaultInjector,
+) -> Result<Attempt> {
+    if asm_slot.is_none() {
+        *asm_slot = Some(StreamAssembler::new(blob.len())?);
+    }
+    let asm = match asm_slot.as_mut() {
+        Some(a) => a,
+        None => return Err(Error::State("stream assembler missing".into())),
+    };
+    let start = asm.received();
+    for chunk in blob[start..].chunks(chunk_bytes.max(1)) {
+        match inj.next_fault() {
+            None => {
+                if asm.push(chunk).is_err() {
+                    // only reachable after an earlier duplicate shifted
+                    // the stream past its declared length
+                    return Ok(Attempt::Poisoned);
+                }
+            }
+            Some(FaultKind::Delay) => {
+                std::thread::sleep(inj.delay());
+                if asm.push(chunk).is_err() {
+                    return Ok(Attempt::Poisoned);
+                }
+            }
+            Some(FaultKind::Drop) | Some(FaultKind::Disconnect) => {
+                return Ok(Attempt::Interrupted);
+            }
+            Some(FaultKind::Truncate) => {
+                let cut = inj.draw_index(chunk.len());
+                if asm.push(&chunk[..cut]).is_err() {
+                    return Ok(Attempt::Poisoned);
+                }
+                return Ok(Attempt::Interrupted);
+            }
+            Some(FaultKind::Corrupt) => {
+                let mut bad = chunk.to_vec();
+                if !bad.is_empty() {
+                    let i = inj.draw_index(bad.len());
+                    bad[i] ^= 0x40;
+                }
+                *tainted = true;
+                if asm.push(&bad).is_err() {
+                    return Ok(Attempt::Poisoned);
+                }
+            }
+            Some(FaultKind::Duplicate) => {
+                *tainted = true;
+                if asm.push(chunk).is_err() || asm.push(chunk).is_err() {
+                    return Ok(Attempt::Poisoned);
+                }
+            }
+        }
+    }
+    if asm.is_complete() {
+        Ok(Attempt::Done)
+    } else {
+        // an injected duplicate/truncation left the stream short
+        Ok(Attempt::Interrupted)
+    }
+}
+
+impl InMemTransport {
+    /// Deliver `blob` under the fault plan: bounded retries with
+    /// exponential backoff, resume-from-last-good-chunk after an
+    /// interruption, restart after detected corruption.  Returns the
+    /// decoded checkpoint, `Error::DeltaBaseMissing` (the caller falls
+    /// back to a full frame), or `Error::RetriesExhausted`.
+    fn deliver_faulty(
+        &self,
+        dest: usize,
+        blob: &[u8],
+        recv_base: Option<&DeltaBase>,
+        plan: &FaultPlan,
+        stream_id: u64,
+        stats: &mut TransferStats,
+    ) -> Result<Checkpoint> {
+        let mut inj = FaultInjector::for_stream(plan.spec, plan.seed, stream_id);
+        let policy = plan.retry();
+        let mut asm: Option<StreamAssembler> = None;
+        let mut tainted = false;
+        for attempt in 0..policy.attempts {
+            policy.wait(attempt);
+            if attempt > 0 {
+                stats.retries += 1;
+                // only the unreceived tail is re-streamed on resume
+                let resend = blob.len() - asm.as_ref().map_or(0, |a| a.received());
+                stats.wire_bytes += resend;
+            }
+            let outcome = push_attempt(blob, &mut asm, &mut tainted, self.chunk_bytes, &mut inj);
+            stats.faults_injected = inj.injected();
+            match outcome? {
+                Attempt::Done => {
+                    let frame = match asm.take() {
+                        Some(a) => a.finish(),
+                        None => Err(Error::State("completed stream vanished".into())),
+                    };
+                    match frame.and_then(|f| codec::decode_with(&f, recv_base)) {
+                        Ok(ck) => {
+                            if stats.retries > 0 {
+                                om::RECOVERIES_TOTAL.inc();
+                            }
+                            return Ok(ck);
+                        }
+                        Err(e @ Error::DeltaBaseMissing { .. }) => return Err(e),
+                        Err(_) if tainted => {
+                            // injected corruption detected at finish/decode
+                            tainted = false;
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+                Attempt::Interrupted => {} // keep the assembler; resume
+                Attempt::Poisoned => {
+                    asm = None;
+                    tainted = false;
+                }
+            }
+        }
+        Err(Error::RetriesExhausted {
+            what: format!(
+                "checkpoint transfer to edge {dest} (fault seed {}, stream {stream_id})",
+                plan.seed
+            ),
+            attempts: policy.attempts,
+        })
+    }
+}
+
 impl Transport for InMemTransport {
     fn send(&self, dest: usize, ck: &Checkpoint) -> Result<TransferStats> {
         let _span = crate::span!("transport_send", dest = dest, device = ck.device_id);
@@ -249,17 +437,42 @@ impl Transport for InMemTransport {
             encode_seconds: enc.encode_seconds,
             ..Default::default()
         };
-        // chunk through the same assembler as the socket path
-        let deliver = |blob: &[u8]| -> Result<Checkpoint> {
-            let mut asm = StreamAssembler::new(blob.len())?;
-            for chunk in blob.chunks(self.chunk_bytes.max(1)) {
-                asm.push(chunk)?;
+        // chunk through the same assembler as the socket path; with a
+        // fault plan active the stream runs through the injector and the
+        // bounded-retry/resume recovery instead
+        let deliver = |blob: &[u8], stats: &mut TransferStats| -> Result<Checkpoint> {
+            match &self.faults {
+                None => {
+                    let mut asm = StreamAssembler::new(blob.len())?;
+                    for chunk in blob.chunks(self.chunk_bytes.max(1)) {
+                        asm.push(chunk)?;
+                    }
+                    let frame = asm.finish()?;
+                    codec::decode_with(&frame, recv_base.as_ref())
+                }
+                Some(plan) => {
+                    let seq = {
+                        let mut seqs = self.send_seq.lock().unwrap();
+                        let e = seqs.entry((dest, ck.device_id)).or_insert(0);
+                        let s = *e;
+                        *e += 1;
+                        s
+                    };
+                    let stream_id =
+                        faultsim::mix(faultsim::mix(dest as u64, ck.device_id), seq);
+                    self.deliver_faulty(
+                        dest,
+                        blob,
+                        recv_base.as_ref(),
+                        plan,
+                        stream_id,
+                        stats,
+                    )
+                }
             }
-            let frame = asm.finish()?;
-            codec::decode_with(&frame, recv_base.as_ref())
         };
         let td0 = Instant::now();
-        let decoded = match deliver(&enc.blob) {
+        let decoded = match deliver(&enc.blob, &mut stats) {
             Ok(d) => d,
             Err(Error::DeltaBaseMissing { .. }) => {
                 // destination cannot prove it holds the base: re-encode
@@ -269,7 +482,7 @@ impl Transport for InMemTransport {
                 stats.wire_bytes += retry.blob.len();
                 stats.used_delta = false;
                 stats.encode_seconds += retry.encode_seconds;
-                deliver(&retry.blob)?
+                deliver(&retry.blob, &mut stats)?
             }
             Err(e) => return Err(e),
         };
@@ -368,6 +581,9 @@ impl ServerShared {
 /// Lives on its own thread so a stalled sender never blocks another
 /// migration (the old server accepted and decoded serially).
 fn serve_conn(mut stream: TcpStream, shared: &ServerShared) {
+    // A sender that dies mid-stream must release this thread: surface
+    // `SO_RCVTIMEO` expiry as a read error and drop the connection.
+    let _ = stream.set_read_timeout(Some(SERVE_READ_TIMEOUT));
     let mut asm: Option<(u64, StreamAssembler)> = None;
     loop {
         let msg = match read_msg(&mut stream) {

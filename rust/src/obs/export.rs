@@ -167,6 +167,9 @@ pub fn snapshot() -> Vec<MetricSnapshot> {
         c("fedfly_h2d_bytes_total", &w::H2D_BYTES_TOTAL),
         c("fedfly_d2h_transfers_total", &w::D2H_TRANSFERS_TOTAL),
         c("fedfly_d2h_bytes_total", &w::D2H_BYTES_TOTAL),
+        c("fedfly_faults_injected_total", &w::FAULTS_INJECTED_TOTAL),
+        c("fedfly_retries_total", &w::RETRIES_TOTAL),
+        c("fedfly_recoveries_total", &w::RECOVERIES_TOTAL),
         g("fedfly_parked_batches", &w::PARKED_BATCHES),
         g("fedfly_mailbox_depth", &w::MAILBOX_DEPTH),
         h("fedfly_encode_latency_us", &w::ENCODE_LATENCY_US),

@@ -231,6 +231,12 @@ pub mod wellknown {
     pub static D2H_BYTES_TOTAL: Counter = Counter::new();
     /// Latency of individual host<->device marshalling operations.
     pub static SYNC_LATENCY_US: Histogram = Histogram::new();
+    /// Faults the deterministic injector fired (`faultsim`).
+    pub static FAULTS_INJECTED_TOTAL: Counter = Counter::new();
+    /// Retry attempts taken after a failed send/RPC (not first attempts).
+    pub static RETRIES_TOTAL: Counter = Counter::new();
+    /// Operations that failed at least once and then completed.
+    pub static RECOVERIES_TOTAL: Counter = Counter::new();
 
     /// Count a protocol ack by code (codes ≥ 9 share the last slot).
     pub fn ack(code: u32) {

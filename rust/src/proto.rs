@@ -29,9 +29,13 @@ pub enum Msg {
     Hello { role: String, id: u64 },
     /// Central -> edge -> device: global parameters for a round (Step 1/6).
     GlobalParams { round: u64, params: Vec<f32> },
-    /// Device -> edge -> central: weighted local update (Step 4).
+    /// Device -> edge -> central: weighted local update (Step 4).  The
+    /// device's round number makes the message idempotent: an edge that
+    /// already forwarded `(device, round)` re-acks a retried copy without
+    /// forwarding it twice (faultsim recovery).
     LocalUpdate {
         device: u64,
+        round: u64,
         weight: f64,
         params: Vec<f32>,
     },
@@ -58,8 +62,16 @@ pub enum Msg {
     CheckpointBegin { device: u64, total_len: u64 },
     /// Edge -> edge: one chunk of an in-flight checkpoint stream.
     CheckpointChunk { device: u64, data: Vec<u8> },
-    /// Device -> edge after reconnect: resume training (Step 9).
-    Resume { device: u64 },
+    /// Edge -> edge, replying to a `CheckpointBegin` that matches a
+    /// stream already partially received: the sender may resume from
+    /// byte `received` instead of restarting (reconnect after a fault).
+    CheckpointResume { device: u64, received: u64 },
+    /// Device -> edge after (re)connect: resume training at `round`
+    /// (Step 9).  The wanted round is explicit so a connection torn down
+    /// and rebuilt mid-round (fault recovery, migration) cannot be served
+    /// a stale broadcast: the edge answers only when it holds `round`'s
+    /// global parameters.
+    Resume { device: u64, round: u64 },
     /// Generic acknowledgement.
     Ack { code: u32 },
     /// Orderly shutdown.
@@ -88,6 +100,7 @@ impl Msg {
             Msg::CheckpointChunk { .. } => 12,
             Msg::MetricsRequest => 13,
             Msg::MetricsReply { .. } => 14,
+            Msg::CheckpointResume { .. } => 15,
         }
     }
 
@@ -104,10 +117,12 @@ impl Msg {
             }
             Msg::LocalUpdate {
                 device,
+                round,
                 weight,
                 params,
             } => {
                 put_u64(&mut b, *device);
+                put_u64(&mut b, *round);
                 put_u64(&mut b, weight.to_bits());
                 put_f32_slice(&mut b, params);
             }
@@ -134,7 +149,10 @@ impl Msg {
                 put_u64(&mut b, blob.len() as u64);
                 b.extend_from_slice(blob);
             }
-            Msg::Resume { device } => put_u64(&mut b, *device),
+            Msg::Resume { device, round } => {
+                put_u64(&mut b, *device);
+                put_u64(&mut b, *round);
+            }
             Msg::Ack { code } => put_u32(&mut b, *code),
             Msg::Bye => {}
             Msg::CheckpointBegin { device, total_len } => {
@@ -148,6 +166,10 @@ impl Msg {
             }
             Msg::MetricsRequest => {}
             Msg::MetricsReply { text } => put_str(&mut b, text),
+            Msg::CheckpointResume { device, received } => {
+                put_u64(&mut b, *device);
+                put_u64(&mut b, *received);
+            }
         }
         b
     }
@@ -166,6 +188,7 @@ impl Msg {
             },
             3 => Msg::LocalUpdate {
                 device: r.u64().map_err(perr)?,
+                round: r.u64().map_err(perr)?,
                 weight: f64::from_bits(r.u64().map_err(perr)?),
                 params: r.f32_vec().map_err(perr)?,
             },
@@ -196,6 +219,7 @@ impl Msg {
             }
             8 => Msg::Resume {
                 device: r.u64().map_err(perr)?,
+                round: r.u64().map_err(perr)?,
             },
             9 => Msg::Ack {
                 code: r.u32().map_err(perr)?,
@@ -219,6 +243,10 @@ impl Msg {
             13 => Msg::MetricsRequest,
             14 => Msg::MetricsReply {
                 text: r.string().map_err(perr)?,
+            },
+            15 => Msg::CheckpointResume {
+                device: r.u64().map_err(perr)?,
+                received: r.u64().map_err(perr)?,
             },
             t => return Err(Error::Proto(format!("unknown tag {t}"))),
         };
@@ -286,6 +314,7 @@ mod tests {
         });
         roundtrip(Msg::LocalUpdate {
             device: 1,
+            round: 12,
             weight: 0.25,
             params: vec![0.0; 100],
         });
@@ -307,7 +336,7 @@ mod tests {
             device: 0,
             blob: (0..=255).collect(),
         });
-        roundtrip(Msg::Resume { device: 9 });
+        roundtrip(Msg::Resume { device: 9, round: 4 });
         roundtrip(Msg::Ack { code: 0 });
         roundtrip(Msg::Bye);
         roundtrip(Msg::CheckpointBegin {
@@ -325,6 +354,10 @@ mod tests {
         roundtrip(Msg::MetricsRequest);
         roundtrip(Msg::MetricsReply {
             text: "# TYPE fedfly_rounds_total counter\nfedfly_rounds_total 5\n".into(),
+        });
+        roundtrip(Msg::CheckpointResume {
+            device: 4,
+            received: 8_192,
         });
     }
 
@@ -388,6 +421,138 @@ mod tests {
                 params,
             });
         });
+    }
+
+    /// A randomly generated instance of one `Msg` variant.
+    fn arbitrary_msg(r: &mut crate::util::Rng) -> Msg {
+        let f32s = |r: &mut crate::util::Rng, max: usize| -> Vec<f32> {
+            let n = r.below(max + 1);
+            (0..n).map(|_| r.gaussian() as f32).collect()
+        };
+        let bytes = |r: &mut crate::util::Rng, max: usize| -> Vec<u8> {
+            let n = r.below(max + 1);
+            (0..n).map(|_| r.next_u64() as u8).collect()
+        };
+        match r.below(15) {
+            0 => Msg::Hello {
+                role: ["device", "edge", "central", ""][r.below(4)].to_string(),
+                id: r.next_u64(),
+            },
+            1 => Msg::GlobalParams {
+                round: r.next_u64(),
+                params: f32s(r, 256),
+            },
+            2 => Msg::LocalUpdate {
+                device: r.next_u64(),
+                round: r.next_u64(),
+                weight: r.next_f64() * 1e6,
+                params: f32s(r, 256),
+            },
+            3 => Msg::Smashed {
+                device: r.next_u64(),
+                data: f32s(r, 256),
+                labels: f32s(r, 32),
+            },
+            4 => Msg::SmashedGrad {
+                device: r.next_u64(),
+                data: f32s(r, 256),
+                loss: r.gaussian() as f32,
+            },
+            5 => Msg::MoveNotice {
+                device: r.next_u64(),
+                dest_edge: r.next_u64(),
+            },
+            6 => Msg::CheckpointTransfer {
+                device: r.next_u64(),
+                blob: bytes(r, 512),
+            },
+            7 => Msg::Resume {
+                device: r.next_u64(),
+                round: r.next_u64(),
+            },
+            8 => Msg::Ack {
+                code: r.next_u64() as u32,
+            },
+            9 => Msg::Bye,
+            10 => Msg::CheckpointBegin {
+                device: r.next_u64(),
+                total_len: r.next_u64(),
+            },
+            11 => Msg::CheckpointChunk {
+                device: r.next_u64(),
+                data: bytes(r, 512),
+            },
+            12 => Msg::MetricsRequest,
+            13 => Msg::MetricsReply {
+                text: String::from_utf8_lossy(&bytes(r, 128)).into_owned(),
+            },
+            _ => Msg::CheckpointResume {
+                device: r.next_u64(),
+                received: r.next_u64(),
+            },
+        }
+    }
+
+    /// Property (satellite: protocol robustness): `write_msg`/`read_msg`
+    /// round-trip every `Msg` variant with arbitrary field contents.
+    #[test]
+    fn prop_all_variants_roundtrip() {
+        use crate::util::prop::forall;
+        forall(200, |r| roundtrip(arbitrary_msg(r)));
+    }
+
+    /// Property: any single corrupted header/payload byte must yield a
+    /// typed error (or, for undetectable mutations, still a valid decode)
+    /// — never a panic or an unbounded allocation.
+    #[test]
+    fn prop_corrupted_frames_never_panic() {
+        use crate::util::prop::forall;
+        forall(200, |r| {
+            let mut buf = Vec::new();
+            write_msg(&mut buf, &arbitrary_msg(r)).unwrap();
+            let i = r.below(buf.len());
+            let bit = 1u8 << r.below(8);
+            buf[i] ^= bit;
+            // must return, not panic; errors must be typed
+            match read_msg(&mut buf.as_slice()) {
+                Ok(_) => {}
+                Err(Error::Proto(_)) | Err(Error::Io(_)) => {}
+                Err(other) => panic!("unexpected error type: {other:?}"),
+            }
+        });
+    }
+
+    /// Property: truncating a frame at any point yields `Error::Io`
+    /// (header/payload short read), never a hang or panic.
+    #[test]
+    fn prop_truncated_frames_are_io_errors() {
+        use crate::util::prop::forall;
+        forall(100, |r| {
+            let mut buf = Vec::new();
+            write_msg(&mut buf, &arbitrary_msg(r)).unwrap();
+            let keep = r.below(buf.len());
+            buf.truncate(keep);
+            assert!(matches!(read_msg(&mut buf.as_slice()), Err(Error::Io(_))));
+        });
+    }
+
+    /// A length prefix beyond `MAX_PAYLOAD` must be rejected before any
+    /// payload allocation, for every tag (satellite: frame-length guard).
+    #[test]
+    fn oversized_length_rejected_for_every_tag() {
+        for tag in 0..=16u32 {
+            let mut buf = Vec::new();
+            put_u32(&mut buf, MAGIC);
+            put_u32(&mut buf, tag);
+            put_u64(&mut buf, MAX_PAYLOAD + 1);
+            put_u32(&mut buf, 0);
+            match read_msg(&mut buf.as_slice()) {
+                Err(Error::Proto(m)) => {
+                    assert!(m.contains("exceeds cap"), "tag {tag}: {m}")
+                }
+                other => panic!("tag {tag}: expected Proto error, got {other:?}"),
+            }
+        }
     }
 
     #[test]

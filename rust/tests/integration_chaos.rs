@@ -1,0 +1,417 @@
+//! Chaos suite: deterministic fault injection on the migration paths,
+//! proving the recovery machinery is *bit-exact* (EXPERIMENTS.md
+//! §Robustness R1).
+//!
+//! Two layers:
+//!
+//! * Always-run transport tests sweep every [`FaultKind`] over
+//!   [`InMemTransport`] (delta and full frames): a recoverable schedule
+//!   must deliver a checkpoint bit-identical to what was sent, an
+//!   unrecoverable one must surface [`Error::RetriesExhausted`] quickly,
+//!   and the same `--fault-seed` must replay the same schedule.
+//! * Artifact-gated tests run the full TCP deployment
+//!   ([`run_in_threads`]) with a live migration under each fault class
+//!   and assert the final global model is bit-identical to the
+//!   fault-free run at the same training seed.
+//!
+//! Every assertion message echoes the fault seed, so a failure is
+//! replayable with `--fault-seed <seed>` (or by exporting
+//! `FEDFLY_FAULT_SEED` to re-pin this suite).
+
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+use fedfly::config::RunConfig;
+use fedfly::coordinator::distributed::{run_in_threads, DistributedRun};
+use fedfly::error::Error;
+use fedfly::experiments::load_meta;
+use fedfly::faultsim::{FaultKind, FaultPlan, FaultSpec};
+use fedfly::migration::codec::{Checkpoint, DeltaBase};
+use fedfly::migration::transport::{InMemTransport, Transport};
+use fedfly::migration::Strategy;
+use fedfly::mobility::{MoveEvent, Schedule};
+use fedfly::util::Rng;
+
+/// The suite's pinned fault seed, overridable for replay/exploration.
+fn fault_seed(default: u64) -> u64 {
+    std::env::var("FEDFLY_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Incompressible checkpoint fixture, so the encoded blob spans several
+/// chunks and the injector gets real mid-stream opportunities.
+fn ck(device: u64, n: usize) -> Checkpoint {
+    let mut rng = Rng::new(0xFEED ^ device);
+    Checkpoint {
+        device_id: device,
+        sp: 2,
+        round: 5,
+        epoch: 1,
+        batch_idx: 9,
+        loss: 0.75,
+        server_params: (0..n).map(|_| rng.gaussian() as f32).collect(),
+        server_momentum: (0..n).map(|_| rng.gaussian() as f32).collect(),
+        grad_smashed: (0..64).map(|_| rng.gaussian() as f32).collect(),
+        rng_state: [device, 2, 3, 4],
+    }
+}
+
+fn assert_bits_eq(want: &[f32], got: &[f32], ctx: &str) {
+    assert_eq!(want.len(), got.len(), "length diverged: {ctx}");
+    for (i, (a, b)) in want.iter().zip(got).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "bit divergence at element {i}: {a:?} vs {b:?} ({ctx})"
+        );
+    }
+}
+
+/// The recovered checkpoint must be the one that was sent, to the bit.
+fn assert_ck_bit_exact(sent: &Checkpoint, got: &Checkpoint, ctx: &str) {
+    assert_eq!(got, sent, "checkpoint diverged: {ctx}");
+    assert_bits_eq(&sent.server_params, &got.server_params, ctx);
+    assert_bits_eq(&sent.server_momentum, &got.server_momentum, ctx);
+    assert_bits_eq(&sent.grad_smashed, &got.grad_smashed, ctx);
+}
+
+/// A recoverable single-class plan: modest probability, generous budget.
+fn recoverable_plan(kind: FaultKind, seed: u64) -> FaultPlan {
+    let mut plan = FaultPlan::new(FaultSpec::only(kind, 0.10), seed);
+    plan.attempts = 16;
+    plan.backoff_ms = 1;
+    plan
+}
+
+/// All classes at once, still comfortably inside the retry budget.
+fn mixed_spec() -> FaultSpec {
+    FaultSpec::parse(
+        "drop=0.05,delay=0.05,duplicate=0.03,truncate=0.05,corrupt=0.03,disconnect=0.05,delay_ms=1",
+    )
+    .unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Transport layer (always run)
+
+#[test]
+fn inmem_every_fault_class_recovers_bit_exact() {
+    let seed = fault_seed(0xC0FFEE);
+    for kind in FaultKind::ALL {
+        let mut t = InMemTransport::with_faults(Some(recoverable_plan(kind, seed)));
+        t.set_chunk_bytes(1024);
+        for device in 0..3u64 {
+            let sent = ck(device, 600);
+            let ctx = format!(
+                "class {} device {device} (replay with --fault-seed {seed})",
+                kind.name()
+            );
+            let stats = t
+                .send(1, &sent)
+                .unwrap_or_else(|e| panic!("send failed under {ctx}: {e}"));
+            assert!(stats.wire_bytes > 0, "no bytes charged: {ctx}");
+            let got = t
+                .receive(1, device)
+                .unwrap()
+                .unwrap_or_else(|| panic!("checkpoint never arrived: {ctx}"));
+            assert_ck_bit_exact(&sent, &got, &ctx);
+        }
+    }
+}
+
+#[test]
+fn inmem_delta_and_full_fallback_recover_bit_exact() {
+    let seed = fault_seed(0xD417A);
+    let mut plan = FaultPlan::new(mixed_spec(), seed);
+    plan.attempts = 16;
+    plan.backoff_ms = 1;
+
+    // Delta path: both endpoints hold the round's broadcast base.
+    let mut t = InMemTransport::with_faults(Some(plan));
+    t.set_chunk_bytes(1024);
+    let sent = ck(4, 600);
+    let base = DeltaBase::from_broadcast(sent.round, sent.server_params.clone());
+    t.register_base(1, base);
+    let ctx = format!("delta path (replay with --fault-seed {seed})");
+    let stats = t
+        .send(1, &sent)
+        .unwrap_or_else(|e| panic!("send failed on {ctx}: {e}"));
+    assert!(stats.used_delta, "expected the delta frame to land: {ctx}");
+    assert_ck_bit_exact(&sent, &t.receive(1, 4).unwrap().unwrap(), &ctx);
+
+    // Fallback path: the destination lost its base mid-round, so the
+    // faulty delta stream resolves with "base missing" and the sender
+    // re-streams a full frame — still through the injector.
+    t.drop_recv_base(1);
+    let sent2 = ck(5, 600);
+    let ctx = format!("full-frame fallback (replay with --fault-seed {seed})");
+    let stats = t
+        .send(1, &sent2)
+        .unwrap_or_else(|e| panic!("send failed on {ctx}: {e}"));
+    assert!(!stats.used_delta, "fallback must report the full path: {ctx}");
+    assert_ck_bit_exact(&sent2, &t.receive(1, 5).unwrap().unwrap(), &ctx);
+}
+
+/// A fault on *every* chunk — mostly truncations, the rest delays —
+/// forces the resume machinery to grind forward byte by byte: the
+/// transfer must still land bit-exact, with the retries and injected
+/// faults visible in the stats.  (A pure truncate storm could never
+/// finish: a truncation always delivers a strict prefix, so the final
+/// byte needs a non-truncating draw to land.)
+#[test]
+fn inmem_truncate_storm_recovers_with_visible_retries() {
+    let seed = fault_seed(0x7277);
+    let spec = FaultSpec::parse("truncate=0.7,delay=0.3,delay_ms=1").unwrap();
+    let mut plan = FaultPlan::new(spec, seed);
+    plan.attempts = 64;
+    plan.backoff_ms = 0;
+    let mut t = InMemTransport::with_faults(Some(plan));
+    t.set_chunk_bytes(512);
+    let sent = ck(6, 600);
+    let ctx = format!("truncate storm (replay with --fault-seed {seed})");
+    let stats = t
+        .send(1, &sent)
+        .unwrap_or_else(|e| panic!("send failed on {ctx}: {e}"));
+    assert!(stats.faults_injected > 0, "no faults fired: {ctx}");
+    assert!(stats.retries > 0, "recovery without retries is not recovery: {ctx}");
+    assert_ck_bit_exact(&sent, &t.receive(1, 6).unwrap().unwrap(), &ctx);
+}
+
+/// Delay faults fire on every chunk but never fail anything, so the
+/// accounting is exactly predictable: one injected fault per chunk,
+/// zero retries.
+#[test]
+fn inmem_fault_accounting_is_exact_under_pure_delay() {
+    let seed = fault_seed(0xDE1A);
+    let mut t = InMemTransport::with_faults(Some(FaultPlan::new(
+        FaultSpec::only(FaultKind::Delay, 1.0),
+        seed,
+    )));
+    t.set_chunk_bytes(1024);
+    let sent = ck(7, 600);
+    let stats = t.send(1, &sent).unwrap();
+    assert_eq!(stats.retries, 0);
+    assert_eq!(
+        stats.faults_injected,
+        stats.wire_bytes.div_ceil(1024) as u64,
+        "expected exactly one delay per chunk (fault seed {seed})"
+    );
+    assert_ck_bit_exact(&sent, &t.receive(1, 7).unwrap().unwrap(), "pure delay");
+}
+
+/// The whole point of seeding: the same `--fault-seed` must reproduce the
+/// same fault schedule — same injected-fault count, same retries, same
+/// wire bytes — and a different seed must still deliver the same bits.
+#[test]
+fn inmem_fault_schedule_replays_from_seed() {
+    let seed = fault_seed(0x5EED);
+    let run = |seed: u64| -> Vec<(u64, u64, usize)> {
+        let mut plan = FaultPlan::new(mixed_spec(), seed);
+        plan.attempts = 16;
+        plan.backoff_ms = 1;
+        let mut t = InMemTransport::with_faults(Some(plan));
+        t.set_chunk_bytes(1024);
+        (0..4u64)
+            .map(|device| {
+                let sent = ck(device, 600);
+                let stats = t.send(1, &sent).unwrap_or_else(|e| {
+                    panic!("send failed for device {device} at fault seed {seed}: {e}")
+                });
+                assert_ck_bit_exact(
+                    &sent,
+                    &t.receive(1, device).unwrap().unwrap(),
+                    &format!("device {device} at fault seed {seed}"),
+                );
+                (stats.faults_injected, stats.retries, stats.wire_bytes)
+            })
+            .collect()
+    };
+    assert_eq!(
+        run(seed),
+        run(seed),
+        "same fault seed must replay the same schedule (seed {seed})"
+    );
+    // A different seed draws a different schedule but the delivered bits
+    // are schedule-invariant — that is the bit-exactness claim.
+    run(seed ^ 0xFFFF);
+}
+
+/// An unrecoverable schedule (every frame lost, tiny budget) must fail
+/// with the typed error — promptly, not by hanging — and name the fault
+/// seed so the failure replays.
+#[test]
+fn inmem_unrecoverable_faults_surface_typed_error_quickly() {
+    let seed = fault_seed(0xBAD);
+    for kind in [FaultKind::Drop, FaultKind::Disconnect] {
+        let mut plan = FaultPlan::new(FaultSpec::only(kind, 1.0), seed);
+        plan.attempts = 3;
+        plan.backoff_ms = 1;
+        let t = InMemTransport::with_faults(Some(plan));
+        let t0 = Instant::now();
+        let err = t.send(1, &ck(8, 600)).unwrap_err();
+        let elapsed = t0.elapsed();
+        match err {
+            Error::RetriesExhausted { what, attempts } => {
+                assert_eq!(attempts, 3, "class {}", kind.name());
+                assert!(
+                    what.contains("fault seed"),
+                    "error must name the seed for replay, got: {what}"
+                );
+            }
+            other => panic!(
+                "expected RetriesExhausted for class {} (fault seed {seed}), got {other:?}",
+                kind.name()
+            ),
+        }
+        assert!(
+            elapsed < Duration::from_secs(5),
+            "typed failure took {elapsed:?} — the budget must bound it (class {})",
+            kind.name()
+        );
+        // Nothing half-delivered may leak into the mailbox.
+        assert!(t.receive(1, 8).unwrap().is_none());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Full TCP deployment (artifact-gated, like integration_distributed)
+
+fn chaos_cfg() -> RunConfig {
+    let mut cfg = RunConfig::small_real();
+    cfg.rounds = 3;
+    cfg.train_samples = 128;
+    cfg.test_samples = 64;
+    cfg.schedule = Schedule::new(vec![MoveEvent {
+        round: 1,
+        device: 0,
+        to_edge: 1,
+    }]);
+    cfg.strategy = Strategy::FedFly;
+    cfg
+}
+
+/// A plan for the TCP sweep: generous attempts, fast backoff, and an ack
+/// timeout long enough that a busy edge never looks like a lost frame.
+fn tcp_plan(spec: FaultSpec, seed: u64) -> FaultPlan {
+    let mut plan = FaultPlan::new(spec, seed);
+    plan.attempts = 16;
+    plan.backoff_ms = 1;
+    plan.io_timeout_ms = 1_000;
+    plan
+}
+
+/// The fault-free reference run, computed once and shared by every TCP
+/// chaos test in this binary.
+static BASELINE: OnceLock<DistributedRun> = OnceLock::new();
+
+fn baseline(manifest: &std::sync::Arc<fedfly::manifest::Manifest>) -> &'static DistributedRun {
+    BASELINE.get_or_init(|| {
+        run_in_threads(&chaos_cfg(), manifest.clone()).expect("fault-free baseline run")
+    })
+}
+
+fn assert_run_matches_baseline(run: &DistributedRun, base: &DistributedRun, ctx: &str) {
+    assert_bits_eq(&base.final_params, &run.final_params, ctx);
+    assert_eq!(run.devices.len(), base.devices.len(), "{ctx}");
+    for (b, r) in base.devices.iter().zip(&run.devices) {
+        assert_eq!(r.batches, b.batches, "device {} batches: {ctx}", b.id);
+        assert_eq!(
+            r.final_loss.to_bits(),
+            b.final_loss.to_bits(),
+            "device {} final loss diverged: {ctx}",
+            b.id
+        );
+        assert_eq!(
+            r.mean_loss.to_bits(),
+            b.mean_loss.to_bits(),
+            "device {} mean loss diverged: {ctx}",
+            b.id
+        );
+    }
+}
+
+/// The headline claim: for every fault class, a real-TCP training run
+/// with a live migration, injected faults, and the recovery machinery in
+/// the loop ends with a global model bit-identical to the fault-free run
+/// at the same training seed.
+#[test]
+fn tcp_chaos_sweep_every_class_is_bit_exact() {
+    let Ok(meta) = load_meta() else { return };
+    let seed = fault_seed(0xFED_F11);
+    let base = baseline(&meta.manifest);
+    // Classes that kill a connection resume from the last good byte, so
+    // they tolerate a higher rate than the ones that poison a stream and
+    // force a restart (corrupt, duplicate).
+    let rates = [
+        (FaultKind::Drop, 0.10),
+        (FaultKind::Delay, 0.25),
+        (FaultKind::Duplicate, 0.05),
+        (FaultKind::Truncate, 0.10),
+        (FaultKind::Corrupt, 0.05),
+        (FaultKind::Disconnect, 0.10),
+    ];
+    for (kind, p) in rates {
+        let mut cfg = chaos_cfg();
+        cfg.faults = Some(tcp_plan(FaultSpec::only(kind, p), seed));
+        let ctx = format!(
+            "TCP class {} p={p} (replay with --fault-seed {seed})",
+            kind.name()
+        );
+        let run = run_in_threads(&cfg, meta.manifest.clone())
+            .unwrap_or_else(|e| panic!("run failed under {ctx}: {e}"));
+        assert_eq!(run.devices[0].migrations, 1, "{ctx}");
+        assert_run_matches_baseline(&run, base, &ctx);
+    }
+}
+
+/// All fault classes at once, and with delta encoding disabled so the
+/// full-frame stream takes the faults instead.
+#[test]
+fn tcp_mixed_chaos_with_full_frames_is_bit_exact() {
+    let Ok(meta) = load_meta() else { return };
+    let seed = fault_seed(0xFED_F12);
+    let base = baseline(&meta.manifest);
+    let mut cfg = chaos_cfg();
+    cfg.delta_migration = false;
+    cfg.faults = Some(tcp_plan(mixed_spec(), seed));
+    let ctx = format!("TCP mixed classes, full frames (replay with --fault-seed {seed})");
+    let run = run_in_threads(&cfg, meta.manifest.clone())
+        .unwrap_or_else(|e| panic!("run failed under {ctx}: {e}"));
+    assert_eq!(run.devices[0].migrations, 1, "{ctx}");
+    assert_run_matches_baseline(&run, base, &ctx);
+}
+
+/// With every RPC frame lost and a two-attempt budget, the deployment
+/// must fail with the typed retries-exhausted error inside the budget —
+/// no panic, no hang, no partial silent success.
+#[test]
+fn tcp_unrecoverable_faults_error_within_budget() {
+    let Ok(meta) = load_meta() else { return };
+    let seed = fault_seed(0xFED_F13);
+    let mut cfg = chaos_cfg();
+    let mut plan = FaultPlan::new(FaultSpec::only(FaultKind::Drop, 1.0), seed);
+    plan.attempts = 2;
+    plan.backoff_ms = 1;
+    plan.io_timeout_ms = 300;
+    cfg.faults = Some(plan);
+    let t0 = Instant::now();
+    let err = run_in_threads(&cfg, meta.manifest.clone())
+        .expect_err("a run that loses every RPC frame must not succeed");
+    let elapsed = t0.elapsed();
+    match err {
+        Error::RetriesExhausted { what, attempts } => {
+            assert_eq!(attempts, 2, "fault seed {seed}");
+            assert!(
+                what.contains("device"),
+                "error should say whose RPC died, got: {what} (fault seed {seed})"
+            );
+        }
+        other => panic!("expected RetriesExhausted (fault seed {seed}), got {other:?}"),
+    }
+    assert!(
+        elapsed < Duration::from_secs(120),
+        "typed failure took {elapsed:?} — must stay inside the timeout budget (fault seed {seed})"
+    );
+}
